@@ -1,0 +1,24 @@
+"""Fig. 6: carbon savings at S=1 across grid regions.
+
+Paper: AU-SA and CAL large savings (high variability / solar); TEX small
+(high mean, low variance); CA-ON small (already ~90% clean).
+"""
+from __future__ import annotations
+
+from benchmarks.common import BenchSetup, run_batch, summarize, write_csv
+
+REGIONS = ("AU-SA", "CAL", "TEX", "CA-ON")
+
+
+def run(instances: int = 24) -> list[dict]:
+    rows = []
+    for hetero in (False, True):
+        for region in REGIONS:
+            r = run_batch(BenchSetup(heterogeneous=hetero, region=region,
+                                     stretch=1.0, instances=instances))
+            row = {"bench": "fig6", "setup": "hetero" if hetero else "homo",
+                   "region": region}
+            row.update(summarize(r))
+            rows.append(row)
+    write_csv("fig6_regions", rows)
+    return rows

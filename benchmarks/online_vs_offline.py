@@ -1,0 +1,62 @@
+"""Beyond-paper: the price of online — carbon-gated dispatch vs the bound.
+
+The paper's §4 poses online heuristics as future work.  This benchmark
+quantifies the gap on the paper's own setup (AU-SA, n=10, k=4, M=5,
+homogeneous): the offline bi-level bound vs two online dispatchers that
+see jobs only at arrival (online_greedy is also the savings baseline):
+
+    savings(online)  = 1 - carbon(gated) / carbon(greedy)
+    savings(offline) = the §Paper S=1.5 bound on the same instances
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (DEF_HORIZON, SA_FAST, BenchSetup, write_csv)
+from repro.core import generate_instance, pack, synthesize
+from repro.core.objectives import check_feasible_np, evaluate
+from repro.core.solvers import solve_bilevel
+from repro.core.solvers.online import online_carbon_gated, online_greedy
+
+
+def run(instances: int = 16) -> list[dict]:
+    setup = BenchSetup(stretch=1.5)
+    rng = np.random.default_rng(setup.seed)
+    year = synthesize(setup.region, days=366, seed=2024)
+    keys = jax.random.split(jax.random.key(setup.seed), instances)
+    sav_online, sav_offline, overshoot = [], [], []
+    for i in range(instances):
+        inst = generate_instance(rng, n_jobs=setup.n_jobs,
+                                 k_tasks=setup.k_tasks,
+                                 n_machines=setup.n_machines)
+        p = pack(inst, pad_tasks=setup.n_jobs * setup.k_tasks)
+        w = year.window(int(rng.integers(0, year.n_epochs - DEF_HORIZON)),
+                        DEF_HORIZON)
+        cum = jnp.asarray(w.cumulative())
+        s0, a0 = online_greedy(p)
+        sg, ag = online_carbon_gated(p, w.intensity, theta=0.4,
+                                     stretch=setup.stretch)
+        assert not check_feasible_np(p, sg, ag)
+        base = evaluate(p, jnp.asarray(s0), jnp.asarray(a0), cum)
+        gated = evaluate(p, jnp.asarray(sg), jnp.asarray(ag), cum)
+        sav_online.append(1 - float(gated.carbon) / float(base.carbon))
+        overshoot.append(float(gated.makespan) / float(base.makespan))
+        res = solve_bilevel(p, cum, keys[i], objective="carbon",
+                            stretch=setup.stretch, cfg1=SA_FAST,
+                            cfg2=SA_FAST)
+        sav_offline.append(float(res.carbon_savings))
+    rows = [{
+        "bench": "online_vs_offline",
+        "stretch": setup.stretch,
+        "online_gated_savings_pct": 100 * float(np.mean(sav_online)),
+        "offline_bound_savings_pct": 100 * float(np.mean(sav_offline)),
+        "online_fraction_of_bound": float(np.mean(sav_online))
+        / max(float(np.mean(sav_offline)), 1e-9),
+        "online_makespan_ratio": float(np.mean(overshoot)),
+        "instances": instances,
+    }]
+    write_csv("online_vs_offline", rows)
+    return rows

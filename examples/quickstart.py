@@ -1,0 +1,73 @@
+"""Quickstart: the paper's result in one minute.
+
+Generates a paper-style FJSP instance (10 jobs x 4 DAG tasks, 5 servers),
+solves the bi-level problem (optimal makespan -> carbon-minimal schedule
+under the same makespan), and prints the schedules + savings.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, synthesize
+from repro.core.carbon import sample_window
+from repro.core.solvers import solve_bilevel
+from repro.core.solvers.annealing import SAConfig
+
+
+def timeline(start, dur, assign, mask, M, width=80):
+    """ASCII Gantt: one row per machine."""
+    T = len(start)
+    end = int(max(start[t] + dur[t] for t in range(T) if mask[t]))
+    scale = max(1, -(-end // width))
+    rows = []
+    for m in range(M):
+        row = ["."] * (end // scale + 1)
+        for t in range(T):
+            if mask[t] and assign[t] == m:
+                for e in range(start[t], start[t] + dur[t]):
+                    row[e // scale] = chr(ord("A") + t % 26)
+        rows.append(f"  m{m}: " + "".join(row))
+    return "\n".join(rows)
+
+
+def main():
+    rng = np.random.default_rng(7)
+    inst = generate_instance(rng, n_jobs=10, k_tasks=4, n_machines=5)
+    p = pack(inst)
+    trace = synthesize("AU-SA", days=30)
+    window = sample_window(trace, rng, 1200)
+    cum = jnp.asarray(window.cumulative())
+
+    print(f"instance: {inst.n_jobs} jobs, {inst.n_tasks} tasks, "
+          f"{inst.n_machines} servers; AU-SA carbon trace")
+    res = solve_bilevel(p, cum, jax.random.key(0), objective="carbon",
+                        stretch=1.0, cfg1=SAConfig(pop=96, iters=150),
+                        cfg2=SAConfig(pop=96, iters=150))
+    dur = np.asarray(p.dur)
+    base, opt = res.baseline, res.optimized
+    mask = np.asarray(p.task_mask)
+
+    print(f"\noptimal makespan (carbon-agnostic): {int(res.opt_makespan)} "
+          f"epochs ({int(res.opt_makespan) / 4:.1f} h)")
+    print(timeline(np.asarray(base.start),
+                   dur[np.arange(p.T), np.asarray(base.assign)],
+                   np.asarray(base.assign), mask, p.M))
+    print(f"  carbon: {float(base.carbon):,.0f} gCO2   "
+          f"energy: {float(base.energy):.1f} kWh")
+
+    print(f"\ncarbon-aware schedule (same makespan bound, S=1):")
+    print(timeline(np.asarray(opt.start),
+                   dur[np.arange(p.T), np.asarray(opt.assign)],
+                   np.asarray(opt.assign), mask, p.M))
+    print(f"  carbon: {float(opt.carbon):,.0f} gCO2   "
+          f"energy: {float(opt.energy):.1f} kWh")
+    print(f"\n=> carbon savings at S=1: "
+          f"{100 * float(res.carbon_savings):.1f}% "
+          f"(paper: ~25% avg homogeneous)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.cluster.energy_model import (MachineClass, TPU_V5E_CLASSES,
+                                        task_profile)
+from repro.cluster.executor import ClusterExecutor, ExecutionReport
+from repro.cluster.workloads import WorkloadSpec, make_cluster_instance
+
+__all__ = ["MachineClass", "TPU_V5E_CLASSES", "task_profile",
+           "ClusterExecutor", "ExecutionReport", "WorkloadSpec",
+           "make_cluster_instance"]

@@ -1,0 +1,205 @@
+"""Simulated cluster executor: faults, stragglers, elastic re-solve.
+
+Runs a solved schedule epoch by epoch and exercises the fault-tolerance
+story the 1000-node posture requires:
+
+* **Machine failure** — at a configured (or sampled) epoch a machine dies.
+  Tasks running there lose progress since their last checkpoint; the
+  executor *re-solves* the remaining DAG from the current epoch on the
+  surviving machines (elastic scaling) using the same bi-level carbon
+  solver that produced the original plan — the paper's scheduler doubles
+  as the recovery planner.
+* **Checkpoint/restart** — ML tasks checkpoint every ``ckpt_epochs``; a
+  restarted task re-runs only the un-checkpointed suffix (matching the
+  Trainer's resume path at the job level).
+* **Stragglers** — a task exceeding ``straggler_factor`` x its expected
+  duration is duplicate-issued on the earliest-free machine; the first
+  copy to finish wins (speculative execution, Graham-style list fallback).
+
+The report compares planned vs. achieved makespan/carbon/energy, so tests
+can assert recovery overhead bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import EPOCH_HOURS, PackedInstance
+from repro.core.solvers.annealing import SAConfig
+from repro.core.solvers.bilevel import solve_bilevel
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    fail_machine: int = -1          # -1: no failure
+    fail_epoch: int = 0
+    straggle_task: int = -1         # task index that runs slow
+    straggle_factor: float = 1.0    # its actual/expected duration ratio
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    planned_makespan: int
+    achieved_makespan: int
+    planned_carbon: float
+    achieved_carbon: float
+    achieved_energy: float
+    n_resolves: int
+    n_restarts: int
+    n_speculative: int
+
+    @property
+    def recovery_overhead(self) -> float:
+        return (self.achieved_makespan / max(self.planned_makespan, 1)) - 1.0
+
+
+class ClusterExecutor:
+    def __init__(self, inst: PackedInstance, cum: jnp.ndarray,
+                 ckpt_epochs: int = 4, straggler_threshold: float = 1.5,
+                 stretch: float = 1.5, seed: int = 0):
+        self.inst = inst
+        self.cum = np.asarray(cum, np.float64)
+        self.ckpt_epochs = ckpt_epochs
+        self.straggler_threshold = straggler_threshold
+        self.stretch = stretch
+        self.key = jax.random.key(seed)
+
+    # -- planning ------------------------------------------------------------
+    def plan(self) -> dict:
+        res = solve_bilevel(self.inst, jnp.asarray(self.cum, jnp.float32),
+                            self.key, objective="carbon",
+                            stretch=self.stretch,
+                            cfg1=SAConfig(pop=64, iters=60),
+                            cfg2=SAConfig(pop=64, iters=60))
+        return {"start": np.asarray(res.optimized.start),
+                "assign": np.asarray(res.optimized.assign),
+                "makespan": int(res.optimized.makespan),
+                "carbon": float(res.optimized.carbon)}
+
+    # -- simulation ----------------------------------------------------------
+    def execute(self, plan: dict, fault: FaultPlan = FaultPlan()
+                ) -> ExecutionReport:
+        inst = self.inst
+        T = inst.T
+        dur = np.asarray(inst.dur)
+        power = np.asarray(inst.power)
+        mask = np.asarray(inst.task_mask)
+        pred = np.asarray(inst.pred)
+        arrival = np.asarray(inst.arrival)
+        M = dur.shape[1]
+
+        start = plan["start"].copy().astype(np.int64)
+        assign = plan["assign"].copy().astype(np.int64)
+        exp_dur = dur[np.arange(T), assign].astype(np.int64)
+        act_dur = exp_dur.copy()
+        if fault.straggle_task >= 0:
+            act_dur[fault.straggle_task] = int(np.ceil(
+                exp_dur[fault.straggle_task] * fault.straggle_factor))
+
+        done = np.zeros(T, bool)
+        done[~mask] = True
+        progress = np.zeros(T, np.int64)     # epochs completed (checkpointed)
+        running: dict[int, tuple[int, int]] = {}   # task -> (machine, since)
+        spec_copy: dict[int, tuple[int, int]] = {}  # speculative duplicates
+        alive = np.ones(M, bool)
+        carbon = 0.0
+        energy = 0.0
+        n_resolves = n_restarts = n_spec = 0
+        t = 0
+        horizon = len(self.cum) - 1
+
+        def ready(tk: int) -> bool:
+            return (mask[tk] and not done[tk] and tk not in running
+                    and arrival[tk] <= t
+                    and all(done[u] for u in range(T) if pred[tk, u]))
+
+        while not done[mask].all() and t < horizon - 1:
+            # 1. machine failure event
+            if fault.fail_machine >= 0 and t == fault.fail_epoch and \
+                    alive[fault.fail_machine]:
+                alive[fault.fail_machine] = False
+                lost = [tk for tk, (m, _) in running.items()
+                        if m == fault.fail_machine]
+                for tk in lost:
+                    del running[tk]
+                    # restart from last checkpoint
+                    progress[tk] = (progress[tk] // self.ckpt_epochs) \
+                        * self.ckpt_epochs
+                    n_restarts += 1
+                # elastic re-solve of the remaining DAG on survivors
+                start, assign = self._resolve(t, done, progress, alive,
+                                              assign)
+                n_resolves += 1
+
+            # 2. start tasks scheduled for <= t
+            for tk in range(T):
+                if ready(tk) and start[tk] <= t and alive[assign[tk]] and \
+                        not any(m == assign[tk] for m, _ in running.values()):
+                    running[tk] = (int(assign[tk]), t)
+
+            # 3. advance one epoch: accrue energy/carbon, progress
+            inten = self.cum[min(t + 1, horizon)] - self.cum[min(t, horizon)]
+            for tk, (m, _) in list(running.items()):
+                energy += power[m] * EPOCH_HOURS
+                carbon += power[m] * inten
+                progress[tk] += 1
+                need = act_dur[tk] if tk not in spec_copy else exp_dur[tk]
+                if progress[tk] >= need:
+                    done[tk] = True
+                    del running[tk]
+                    spec_copy.pop(tk, None)
+                elif (tk not in spec_copy
+                      and progress[tk] > self.straggler_threshold
+                      * exp_dur[tk]):
+                    free = [mm for mm in range(M) if alive[mm]
+                            and mm != m and not any(
+                                rm == mm for rm, _ in running.values())]
+                    if free:
+                        spec_copy[tk] = (free[0], t)   # duplicate-issue
+                        act_dur[tk] = progress[tk] + exp_dur[tk] // 2
+                        n_spec += 1
+            t += 1
+
+        return ExecutionReport(
+            planned_makespan=plan["makespan"],
+            achieved_makespan=t,
+            planned_carbon=plan["carbon"],
+            achieved_carbon=float(carbon),
+            achieved_energy=float(energy),
+            n_resolves=n_resolves, n_restarts=n_restarts,
+            n_speculative=n_spec)
+
+    # -- elastic re-solve ------------------------------------------------------
+    def _resolve(self, t: int, done: np.ndarray, progress: np.ndarray,
+                 alive: np.ndarray, assign: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Re-plan the unfinished tasks from epoch ``t`` on live machines:
+        completed work is modeled by shrinking remaining durations; dead
+        machines are disallowed."""
+        inst = self.inst
+        dur = np.asarray(inst.dur).copy()
+        mask = np.asarray(inst.task_mask)
+        T = inst.T
+        rem = np.maximum(
+            dur[np.arange(T), assign] - progress, 1)
+        scale = rem / np.maximum(dur[np.arange(T), assign], 1)
+        dur = np.maximum((dur * scale[:, None]).astype(np.int32), 1)
+        dur[done & mask] = 1
+        allowed = np.asarray(inst.allowed) & alive[None, :]
+        arrival = np.maximum(np.asarray(inst.arrival), t)
+        arrival[done & mask] = t
+        new_inst = PackedInstance(
+            dur=jnp.asarray(dur), allowed=jnp.asarray(allowed),
+            pred=inst.pred, arrival=jnp.asarray(arrival.astype(np.int32)),
+            job=inst.job, task_mask=inst.task_mask, power=inst.power)
+        self.key, k = jax.random.split(self.key)
+        res = solve_bilevel(new_inst, jnp.asarray(self.cum, jnp.float32),
+                            k, objective="carbon", stretch=self.stretch,
+                            cfg1=SAConfig(pop=32, iters=40),
+                            cfg2=SAConfig(pop=32, iters=40))
+        return (np.asarray(res.optimized.start).astype(np.int64),
+                np.asarray(res.optimized.assign).astype(np.int64))

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: carbon-aware flexible job-shop
+scheduling of DAG workloads (bi-level makespan -> carbon/energy protocol),
+implemented as TPU-friendly JAX population search over SGS encodings.
+
+Public API:
+    instance   — FJSP instances (jobs, DAG tasks, machines) + generators
+    carbon     — carbon-intensity traces (4 region profiles, CSV ingest)
+    objectives — makespan / energy / carbon evaluators + feasibility
+    decoder    — SGS decoders + carbon timing sweep
+    solvers    — SA / GA / exact oracle / bi-level driver
+"""
+from repro.core import carbon, decoder, instance, objectives
+from repro.core.instance import (Instance, Job, PackedInstance,
+                                 generate_instance, pack, stack_packed)
+from repro.core.carbon import CarbonTrace, REGIONS, synthesize
+from repro.core.solvers import (BilevelResult, ScheduleResult, solve_bilevel,
+                                solve_bilevel_batch, solve_ga, solve_sa)
+
+__all__ = [
+    "carbon", "decoder", "instance", "objectives",
+    "Instance", "Job", "PackedInstance", "generate_instance", "pack",
+    "stack_packed", "CarbonTrace", "REGIONS", "synthesize",
+    "BilevelResult", "ScheduleResult", "solve_bilevel",
+    "solve_bilevel_batch", "solve_ga", "solve_sa",
+]

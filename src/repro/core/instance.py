@@ -1,0 +1,230 @@
+"""FJSP instance model: jobs with DAG task dependencies on heterogeneous machines.
+
+Mirrors the paper's Appendix A inputs:
+  - jobs ``j`` with arrival times ``a_j`` (epochs),
+  - per-job task DAGs ``G_j = (V_j, E_j)``,
+  - machines ``m`` with power draw ``P_m`` (kW) and per-task processing
+    times ``p_{t,m}`` (epochs, 1 epoch = 15 minutes),
+  - every task may run on a subset of machines (``allowed``).
+
+Two representations:
+  * :class:`Instance` — numpy/object level, built by generators, convenient
+    for the exact oracle and for humans.
+  * :class:`PackedInstance` — fixed-shape jnp arrays (padded) consumed by the
+    vmapped JAX decoders/solvers.  Tasks are topologically indexed so that a
+    predecessor always has a smaller index than its successor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# A task that cannot run on machine m gets this processing time; the decoder
+# masks such machines out, this is belt-and-braces.
+INF_DUR = np.int32(2**20)
+
+EPOCH_HOURS = 0.25  # 15-minute epochs, as in the paper.
+
+# The paper's heterogeneous setup (Section 3.1): five server classes.
+HETERO_POWERS_KW = (0.25, 0.5, 1.0, 1.5, 2.0)
+HETERO_SPEEDS = (1.0 / 3.0, 1.0 / 2.0, 1.0, 4.0 / 3.0, 2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One job: ``k`` tasks with a DAG over them and an arrival epoch."""
+
+    arrival: int
+    # durations on the *baseline* (speed-1) machine, one per task, in epochs.
+    base_durations: tuple[int, ...]
+    # DAG edges (u, v): task u must complete before task v starts. Local
+    # indices 0..k-1, topologically consistent (u < v).
+    edges: tuple[tuple[int, int], ...]
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.base_durations)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """A full FJSP instance (numpy level)."""
+
+    jobs: tuple[Job, ...]
+    powers_kw: tuple[float, ...]   # per machine
+    speeds: tuple[float, ...]      # per machine, relative to baseline
+    # allowed[j][i] -> tuple of machine ids; None means "all machines".
+    allowed: tuple | None = None
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.jobs)
+
+    @property
+    def n_machines(self) -> int:
+        return len(self.powers_kw)
+
+    @property
+    def n_tasks(self) -> int:
+        return sum(j.n_tasks for j in self.jobs)
+
+    def durations_matrix(self) -> np.ndarray:
+        """[T, M] int32 processing times (ceil of base/speed), INF if disallowed."""
+        T, M = self.n_tasks, self.n_machines
+        dur = np.full((T, M), INF_DUR, dtype=np.int32)
+        t = 0
+        for ji, job in enumerate(self.jobs):
+            for i, d in enumerate(job.base_durations):
+                for m in range(M):
+                    if self.allowed is not None and m not in self.allowed[ji][i]:
+                        continue
+                    dur[t, m] = max(1, int(np.ceil(d / self.speeds[m])))
+                t += 1
+        return dur
+
+
+class PackedInstance(NamedTuple):
+    """Fixed-shape, padded arrays for the JAX decoders.
+
+    All tasks across all jobs are flattened to a single axis of length ``T``
+    (static), topologically ordered (any predecessor index < successor index).
+    Padded tasks have ``task_mask == False``, zero duration on machine 0 and
+    no dependencies, so they are scheduled instantly and never affect the
+    objectives (which mask them out).
+    """
+
+    dur: jnp.ndarray        # int32 [T, M]
+    allowed: jnp.ndarray    # bool  [T, M]
+    pred: jnp.ndarray       # bool  [T, T] ; pred[t, u] == True -> u before t
+    arrival: jnp.ndarray    # int32 [T]
+    job: jnp.ndarray        # int32 [T]
+    task_mask: jnp.ndarray  # bool  [T]
+    power: jnp.ndarray      # float32 [M]
+
+    @property
+    def T(self) -> int:  # noqa: N802 - matches the math.
+        return self.dur.shape[0]
+
+    @property
+    def M(self) -> int:  # noqa: N802
+        return self.dur.shape[1]
+
+
+def pack(inst: Instance, pad_tasks: int | None = None) -> PackedInstance:
+    """Pack an :class:`Instance` to fixed-shape arrays (optionally padded to
+    ``pad_tasks`` total tasks so instances of different sizes can be batched)."""
+    T_real, M = inst.n_tasks, inst.n_machines
+    T = pad_tasks or T_real
+    if T < T_real:
+        raise ValueError(f"pad_tasks={T} < real task count {T_real}")
+
+    dur = np.zeros((T, M), dtype=np.int32)
+    allowed = np.zeros((T, M), dtype=bool)
+    pred = np.zeros((T, T), dtype=bool)
+    arrival = np.zeros((T,), dtype=np.int32)
+    job_id = np.zeros((T,), dtype=np.int32)
+    task_mask = np.zeros((T,), dtype=bool)
+
+    dmat = inst.durations_matrix()
+    dur[:T_real] = dmat
+    allowed[:T_real] = dmat < INF_DUR
+    t0 = 0
+    for ji, job in enumerate(inst.jobs):
+        k = job.n_tasks
+        for (u, v) in job.edges:
+            if not (0 <= u < v < k):
+                raise ValueError(f"edge ({u},{v}) not topological in job {ji}")
+            pred[t0 + v, t0 + u] = True
+        arrival[t0:t0 + k] = job.arrival
+        job_id[t0:t0 + k] = ji
+        task_mask[t0:t0 + k] = True
+        t0 += k
+    # Padding tasks: dur 0 on machine 0 only, no deps, arrive at 0.
+    if T > T_real:
+        allowed[T_real:, 0] = True
+
+    return PackedInstance(
+        dur=jnp.asarray(dur),
+        allowed=jnp.asarray(allowed),
+        pred=jnp.asarray(pred),
+        arrival=jnp.asarray(arrival),
+        job=jnp.asarray(job_id),
+        task_mask=jnp.asarray(task_mask),
+        power=jnp.asarray(np.asarray(inst.powers_kw, dtype=np.float32)),
+    )
+
+
+def stack_packed(insts: Sequence[PackedInstance]) -> PackedInstance:
+    """Stack same-shape packed instances along a leading batch axis."""
+    return PackedInstance(*(jnp.stack([getattr(p, f) for p in insts])
+                            for f in PackedInstance._fields))
+
+
+# ---------------------------------------------------------------------------
+# Generators (Section 3.1 of the paper).
+# ---------------------------------------------------------------------------
+
+def chain_edges(k: int) -> tuple[tuple[int, int], ...]:
+    """t0 -> t1 -> ... -> t_{k-1}."""
+    return tuple((i, i + 1) for i in range(k - 1))
+
+
+def branch_edges(k: int) -> tuple[tuple[int, int], ...]:
+    """Root feeding two (near-)balanced chains (the middle shape of Fig. 3)."""
+    if k <= 2:
+        return chain_edges(k)
+    edges = [(0, 1), (0, 2)]
+    # Continue the two branches alternately: 1->3, 2->4, 3->5, ...
+    for v in range(3, k):
+        edges.append((v - 2, v))
+    return tuple(edges)
+
+
+def fanout_edges(k: int) -> tuple[tuple[int, int], ...]:
+    """One root feeding all other tasks (the right shape of Fig. 3)."""
+    return tuple((0, v) for v in range(1, k))
+
+
+DAG_SHAPES = ("chain", "branch", "fanout")
+_EDGE_FNS = {"chain": chain_edges, "branch": branch_edges, "fanout": fanout_edges}
+
+
+def sample_job(rng: np.random.Generator, k: int, mean_dur: float = 7.0,
+               arrival_horizon: int = 96, shape: str | None = None) -> Job:
+    """Sample one job per the paper: exp(mean 7 epochs) durations (ceil, >=1),
+    uniform arrival in the next 24h (96 epochs), DAG from Fig. 3 shapes."""
+    if shape is None:
+        shape = DAG_SHAPES[rng.integers(len(DAG_SHAPES))]
+    durs = np.maximum(1, np.ceil(rng.exponential(mean_dur, size=k))).astype(int)
+    arrival = int(rng.integers(0, arrival_horizon))
+    return Job(arrival=arrival, base_durations=tuple(int(d) for d in durs),
+               edges=_EDGE_FNS[shape](k))
+
+
+def generate_instance(
+    rng: np.random.Generator,
+    n_jobs: int = 10,
+    k_tasks: int = 4,
+    n_machines: int = 5,
+    heterogeneous: bool = False,
+    mean_dur: float = 7.0,
+    arrival_horizon: int = 96,
+    shape: str | None = None,
+) -> Instance:
+    """Sample a paper-style instance (Section 3.1 defaults: n=10, k=4, M=5)."""
+    jobs = tuple(sample_job(rng, k_tasks, mean_dur, arrival_horizon, shape)
+                 for _ in range(n_jobs))
+    if heterogeneous:
+        if n_machines == 5:
+            powers, speeds = HETERO_POWERS_KW, HETERO_SPEEDS
+        else:  # cycle the 5 classes
+            powers = tuple(HETERO_POWERS_KW[i % 5] for i in range(n_machines))
+            speeds = tuple(HETERO_SPEEDS[i % 5] for i in range(n_machines))
+    else:
+        powers = (1.0,) * n_machines
+        speeds = (1.0,) * n_machines
+    return Instance(jobs=jobs, powers_kw=powers, speeds=speeds)

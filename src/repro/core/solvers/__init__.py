@@ -1,0 +1,11 @@
+from repro.core.solvers.common import ScheduleResult, fitness_fn, decode_full
+from repro.core.solvers.annealing import solve_sa
+from repro.core.solvers.genetic import solve_ga
+from repro.core.solvers.bilevel import BilevelResult, solve_bilevel, solve_bilevel_batch
+from repro.core.solvers.online import online_carbon_gated, online_greedy
+
+__all__ = [
+    "ScheduleResult", "fitness_fn", "decode_full", "solve_sa", "solve_ga",
+    "BilevelResult", "solve_bilevel", "solve_bilevel_batch",
+    "online_carbon_gated", "online_greedy",
+]

@@ -1,0 +1,109 @@
+"""The paper's bi-level protocol (Section 2/3.1), end to end in JAX.
+
+Phase 1  — classic FJSP: minimize makespan, carbon-agnostic.  The result is
+           both the baseline schedule (against which savings are reported)
+           and the constraint OPT.
+Phase 2  — minimize carbon (Def 2.3) or energy (Def 2.2) subject to
+           makespan <= floor(S * OPT) for stretch factor S >= 1, warm-started
+           from the phase-1 schedule (which is always feasible for S >= 1, so
+           savings are never negative by construction — unlike the paper's
+           timeout'd CP-SAT, which occasionally returns worse-than-baseline
+           schedules at large S, see Fig. 5b).
+
+``solve_bilevel`` is a pure jnp function of (instance, trace, key);
+``solve_bilevel_batch`` vmaps it across instances so a whole benchmark
+config (e.g. 1000 paper instances) is one XLA program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.solvers import common
+from repro.core.solvers.annealing import SAConfig, solve_sa
+from repro.core.solvers.genetic import GAConfig, solve_ga
+
+NO_DEADLINE = jnp.int32(1 << 27)
+
+
+class BilevelResult(NamedTuple):
+    opt_makespan: jnp.ndarray       # phase-1 OPT (epochs)
+    deadline: jnp.ndarray           # floor(S * OPT)
+    baseline: common.ScheduleResult  # carbon-agnostic, makespan-optimal
+    optimized: common.ScheduleResult
+    carbon_savings: jnp.ndarray     # 1 - opt.carbon / baseline.carbon
+    energy_savings: jnp.ndarray     # 1 - opt.energy / baseline.energy
+
+
+@functools.partial(
+    jax.jit, static_argnames=("objective", "stretch", "solver", "cfg1", "cfg2"))
+def solve_bilevel(inst: PackedInstance, cum: jnp.ndarray, key: jax.Array,
+                  objective: str = "carbon", stretch: float = 1.0,
+                  solver: str = "sa",
+                  cfg1: SAConfig | GAConfig | None = None,
+                  cfg2: SAConfig | GAConfig | None = None) -> BilevelResult:
+    if solver == "sa":
+        solve = solve_sa
+        cfg1 = cfg1 or SAConfig()
+        cfg2 = cfg2 or cfg1
+    elif solver == "ga":
+        solve = solve_ga
+        cfg1 = cfg1 or GAConfig()
+        cfg2 = cfg2 or cfg1
+    else:
+        raise ValueError(f"unknown solver {solver!r}")
+    k1, k2 = jax.random.split(key)
+
+    # ---- Phase 1: makespan-only (the carbon-agnostic baseline). ----------
+    p1 = solve(inst, cum, NO_DEADLINE, k1, objective="makespan",
+               machine_rule="earliest_finish", cfg=cfg1)
+    baseline = common.decode_full(
+        inst, cum, NO_DEADLINE, p1.prio, p1.assign,
+        objective="makespan", machine_rule="earliest_finish", sweeps=0)
+    opt_ms = baseline.makespan
+    deadline = jnp.floor(stretch * opt_ms.astype(jnp.float32) + 1e-6
+                         ).astype(jnp.int32)
+
+    # ---- Phase 2: carbon/energy under makespan <= S * OPT. ---------------
+    # Warm start: the baseline's own (sequence, assignment) is feasible.
+    p2 = solve(inst, cum, deadline, k2, objective=objective,
+               machine_rule="fixed", cfg=cfg2,
+               prio_init=-baseline.start.astype(jnp.float32),
+               assign_init=baseline.assign)
+    optimized = common.decode_full(
+        inst, cum, deadline, p2.prio, p2.assign,
+        objective=objective, machine_rule="fixed", sweeps=max(
+            getattr(cfg2, "sweeps", 2), 1))
+
+    # Guard: if phase 2 somehow ended worse (it cannot, given the warm start
+    # chain is kept, but belt-and-braces), fall back to the timing-swept
+    # baseline which is feasible by construction.
+    fallback = common.decode_full(
+        inst, cum, deadline, -baseline.start.astype(jnp.float32),
+        baseline.assign, objective=objective, machine_rule="fixed",
+        sweeps=max(getattr(cfg2, "sweeps", 2), 1))
+    key_obj = {"carbon": 4, "energy": 3}[objective]
+    use_fb = (optimized[key_obj] > fallback[key_obj]) | \
+        (optimized.makespan > deadline)
+    optimized = jax.tree.map(
+        lambda a, b: jnp.where(use_fb, b, a), optimized, fallback)
+
+    return BilevelResult(
+        opt_makespan=opt_ms,
+        deadline=deadline,
+        baseline=baseline,
+        optimized=optimized,
+        carbon_savings=1.0 - optimized.carbon / jnp.maximum(baseline.carbon, 1e-9),
+        energy_savings=1.0 - optimized.energy / jnp.maximum(baseline.energy, 1e-9),
+    )
+
+
+def solve_bilevel_batch(insts: PackedInstance, cums: jnp.ndarray,
+                        keys: jax.Array, **kw) -> BilevelResult:
+    """vmap of :func:`solve_bilevel` over a leading instance axis."""
+    fn = functools.partial(solve_bilevel, **kw)
+    return jax.vmap(fn)(insts, cums, keys)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  schedule_eval   — batched FJSP schedule carbon evaluation (the paper's
+                    solver fitness hot spot)
+  flash_attention — causal/windowed GQA flash attention (train/prefill)
+  ssd_scan        — Mamba2 SSD chunk scan with VMEM-resident state
+
+Each kernel: ``pl.pallas_call`` + explicit BlockSpec tiling in
+``<name>.py``, a jit'd wrapper in ``ops.py``, a naive oracle in ``ref.py``.
+Tests sweep shapes/dtypes in ``interpret=True`` mode (CPU executes the
+kernel body); on TPU pass ``interpret=False`` (the ``ops`` default).
+"""
+from repro.kernels.ops import flash_attention, population_carbon, ssd_scan
+
+__all__ = ["flash_attention", "population_carbon", "ssd_scan"]

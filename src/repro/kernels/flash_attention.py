@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: causal flash attention (GQA via index-map folding).
+
+Tiling (the TPU adaptation of the CUDA flash algorithm — VMEM/MXU instead
+of shared-memory/warps): grid = (B*H, nq, nk) with the kv dim innermost
+(sequential); q tiles [bq, dh] stay resident across the kv sweep while
+m/l/acc live in VMEM scratch.  GQA never materializes repeated K/V: the
+k/v BlockSpec index maps fold the query-head index onto its kv head
+(``h // group``), so each kv block is streamed once per group from HBM.
+
+Causal + sliding-window masking is positional (iota compare) on diagonal
+tiles only; fully-masked tiles are skipped with ``pl.when`` — on hardware
+the MXU issue is predicated away, matching the unrolled-triangle jnp path
+the dry-run lowers (see models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, n_k: int,
+            causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+    # Tile-level skip: fully above the diagonal / fully below the window.
+    live = jnp.bool_(True)
+    if causal:
+        live = k_lo <= q_lo + block_q - 1
+        if window:
+            live = jnp.logical_and(
+                live, k_lo + block_k - 1 >= q_lo - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)            # [bq, dh]
+        k = k_ref[...].astype(jnp.float32)            # [bk, dh]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # [bq, bk]
+        if causal or window:
+            qpos = q_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = kpos <= qpos if causal else jnp.full(
+                (block_q, block_k), True)
+            if window:
+                mask = jnp.logical_and(mask, kpos > qpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q [B, H, Sq, dh]; k, v [B, KVH, Skv, dh] (H % KVH == 0).
+
+    Returns [B, H, Sq, dh] in q.dtype.  ``interpret=True`` validates the
+    kernel body on CPU; pass False on TPU.
+    """
+    B, H, Sq, dh = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = 1.0 / math.sqrt(dh)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "pad seq to block multiples"
+    nq, nk = Sq // bq, Skv // bk
+
+    qf = q.reshape(B * H, Sq, dh)
+    kf = k.reshape(B * KVH, Skv, dh)
+    vf = v.reshape(B * KVH, Skv, dh)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=bq, block_k=bk, n_k=nk,
+        causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((None, bk, dh),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((None, bk, dh),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, dh)

@@ -1,0 +1,55 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op accepts the framework-native layouts, handles padding/reshaping,
+and dispatches to the kernel (``interpret=True`` on CPU — the validation
+mode — and ``interpret=False`` on TPU).  ``on_tpu()`` picks the default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.objectives import task_durations
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.schedule_eval import schedule_carbon_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def population_carbon(inst: PackedInstance, starts: jnp.ndarray,
+                      assigns: jnp.ndarray, cum: jnp.ndarray,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Carbon of a candidate population. starts/assigns [Pop, T] -> [Pop].
+
+    The solver hot spot (fitness evaluation) as one kernel call: durations
+    and powers are pre-gathered per candidate (cheap XLA gathers), the
+    trace integral runs in the Pallas kernel.
+    """
+    interpret = (not on_tpu()) if interpret is None else interpret
+    dur = jax.vmap(lambda a: task_durations(inst, a))(assigns)
+    power = inst.power[assigns] * inst.task_mask[None, :]
+    return schedule_carbon_pallas(starts, dur, power.astype(jnp.float32),
+                                  cum, interpret=interpret)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q [B,H,S,dh]; k,v [B,KVH,Skv,dh] -> [B,H,S,dh]."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 64,
+             interpret: bool | None = None):
+    """Chunked SSD with VMEM-resident state. See ssd_scan_pallas."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=interpret)

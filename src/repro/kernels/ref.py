@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the *naive* formulations — full score matrices,
+sequential scans — so a kernel bug cannot hide behind a shared trick.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def schedule_carbon_ref(start: jnp.ndarray, dur: jnp.ndarray,
+                        power: jnp.ndarray, cum: jnp.ndarray) -> jnp.ndarray:
+    """start/dur [Pop, T] i32; power [Pop, T] f32; cum [H+1]. -> [Pop]."""
+    e = cum.shape[0] - 1
+    s0 = jnp.clip(start, 0, e)
+    s1 = jnp.clip(start + dur, 0, e)
+    return jnp.sum(power * (cum[s1] - cum[s0]), axis=1)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q [B,H,S,dh]; k,v [B,KVH,Skv,dh]. Full-matrix softmax attention."""
+    B, H, Sq, dh = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    rep = H // KVH
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+    if causal or window:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Skv)[None, :]
+        mask = kpos <= qpos if causal else jnp.ones((Sq, Skv), bool)
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (see models/ssm.ssd_ref, re-exported with
+    the kernel-facing signature). Returns (y, h_final)."""
+    from repro.models.ssm import ssd_ref as _ssd_ref
+    return _ssd_ref(x, dt, A, Bm, Cm)

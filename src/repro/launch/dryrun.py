@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh).
+
+For each cell this script:
+  1. builds the production program (train_step for ``train_*`` shapes,
+     prefill/decode serve steps otherwise) with scanned layers, remat,
+     per-arch auto sharding rules and ZeRO stage;
+  2. lowers + compiles it on the production mesh (16x16 single-pod or
+     2x16x16 multi-pod of host-platform placeholder devices);
+  3. records ``memory_analysis()`` (per-chip bytes — proves the memory
+     plan) and ``cost_analysis()`` (per-chip FLOPs/bytes);
+  4. compiles two *probe* programs (1 and 2 unrolled layers, same
+     sharding) so scan-body costs can be extrapolated exactly
+     (see launch/hlo_analysis.py), and parses collective wire bytes;
+  5. writes one JSON per cell under ``experiments/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import numpy as np  # noqa: E402
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import batch_shardings, make_parallel
+from repro.models.api import build_model
+from repro.models.common import (ArchConfig, SHAPES, input_specs,
+                                 supports_shape)
+from repro.models.params import (param_pspecs, sharded_size_bytes,
+                                 tree_map_defs)
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.adamw import OptState
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+HBM_BYTES = 16e9               # v5e per chip
+ACT_BUDGET = 6e9               # activation-carry budget driving microbatching
+
+
+# ---------------------------------------------------------------------------
+# Cell policy: dtypes, ZeRO stage, microbatches.
+# ---------------------------------------------------------------------------
+
+def cell_policy(cfg: ArchConfig, shape: str, mesh, overrides: dict
+                ) -> dict:
+    kind = SHAPES[shape].kind
+    n_param = cfg.param_count()
+    policy = {
+        "kind": kind,
+        "param_dtype": "float32" if kind == "train" else "bfloat16",
+        "zero_stage": 3 if kind == "train" else 0,
+        "moment_dtype": "bfloat16" if n_param > 2e11 else "float32",
+        "remat": "full",
+        "attn_block": 2048,
+        "scan_layers": True,
+        "microbatches": 1,
+        "seq_shard": False,
+        "moe_ep": True,
+        "ar_barrier": False,
+        "kv_seq_shard": False,
+    }
+    if kind != "train":
+        # Serving: TP-only unless bf16 weights don't fit a chip.
+        rules_tp = make_parallel(cfg, mesh, zero_stage=0).effective_rules()
+        from repro.models.api import model_defs
+        per_chip = sharded_size_bytes(
+            tree_map_defs(lambda d: dataclasses.replace(d, dtype=jnp.bfloat16),
+                          model_defs(cfg)),
+            rules_tp, dict(mesh.shape))
+        if per_chip > 0.85 * HBM_BYTES:
+            policy["zero_stage"] = 3
+    if kind == "train":
+        sc = SHAPES[shape]
+        data = 1
+        for a in ("pod", "data"):
+            data *= mesh.shape.get(a, 1)
+        b_loc = max(sc.batch // data, 1)
+        carry = cfg.n_layers * b_loc * sc.seq * cfg.d_model * 2.0
+        micro = 1
+        while carry / micro > ACT_BUDGET and micro < b_loc:
+            micro *= 2
+        policy["microbatches"] = micro
+    policy.update(overrides)
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# Program builders.
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: str, mesh, policy: dict,
+               probe_layers: int | None = None):
+    """Returns (jitted_fn, arg_SDS_tuple)."""
+    if probe_layers is not None:
+        enc = probe_layers if cfg.n_encoder_layers else 0
+        cfg = dataclasses.replace(cfg, n_layers=probe_layers,
+                                  n_encoder_layers=enc)
+    par = make_parallel(
+        cfg, mesh, zero_stage=policy["zero_stage"],
+        seq_shard=policy["seq_shard"], remat=policy["remat"],
+        attn_block=policy["attn_block"],
+        scan_layers=policy["scan_layers"] and probe_layers is None,
+        moe_ep=policy["moe_ep"], ar_barrier=policy["ar_barrier"])
+    model = build_model(cfg)
+    pdt = jnp.dtype(policy["param_dtype"])
+    p_sds = tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, pdt if jnp.issubdtype(d.dtype, jnp.floating) else d.dtype),
+        model.defs)
+    rules = par.effective_rules()
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_pspecs(model.defs, rules))
+    b_sds = input_specs(cfg, shape)
+    b_shard = batch_shardings(cfg, shape, mesh, rules,
+                              kv_seq_shard=policy["kv_seq_shard"])
+
+    kind = policy["kind"]
+    if kind == "train":
+        mdt = jnp.dtype(policy["moment_dtype"])
+        m_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_sds)
+        o_sds = OptState(m=m_sds, v=m_sds,
+                         step=jax.ShapeDtypeStruct((), jnp.int32))
+        # ZeRO-1/2: params (or dense params) replicated over data in
+        # fwd/bwd, but moments always fully sharded over the data axes —
+        # GSPMD reduce-scatters grads into the update and all-gathers the
+        # new params, the classic ZeRO-1 schedule.
+        m_rules = (make_parallel(cfg, mesh, zero_stage=3).effective_rules()
+                   if policy["zero_stage"] in (1, 2) else rules)
+        m_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               param_pspecs(model.defs, m_rules))
+        o_shard = OptState(m=m_shard, v=m_shard,
+                           step=NamedSharding(mesh, P()))
+        opt_cfg = AdamWConfig(moment_dtype=mdt)
+        # Probes must see the whole batch in one pass: a microbatch scan is
+        # another while-loop cost_analysis counts once (EXPERIMENTS §meth).
+        micro = policy["microbatches"] if probe_layers is None else 1
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p, b):
+                return model.loss(p, b, cfg, par)
+            if micro > 1:
+                def mstep(carry, mb):
+                    l0, g0 = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                    return (l0 + l, jax.tree.map(jnp.add, g0, g)), None
+                split = jax.tree.map(
+                    lambda x: x.reshape((micro, x.shape[0] // micro)
+                                        + x.shape[1:])
+                    if getattr(x, "ndim", 0) else x, batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    mstep, (jnp.float32(0), zeros), split)
+                loss, grads = loss / micro, jax.tree.map(
+                    lambda g: g / micro, grads)
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state, _ = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+            return params, opt_state, loss
+
+        fn = jax.jit(train_step, in_shardings=(p_shard, o_shard, b_shard),
+                     donate_argnums=(0, 1))
+        return fn, (p_sds, o_sds, b_sds)
+
+    if kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch, cfg, par)
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        return fn, (p_sds, b_sds)
+
+    def decode(params, batch):
+        return model.decode(params, batch, cfg, par)
+    fn = jax.jit(decode, in_shardings=(p_shard, b_shard),
+                 donate_argnums=(1,))
+    return fn, (p_sds, b_sds)
+
+
+# ---------------------------------------------------------------------------
+# One cell end to end.
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, multi_pod: bool, probes: bool = True,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = configs.get(arch)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "tag": tag or "baseline"}
+    ok, reason = supports_shape(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = cell_policy(cfg, shape, mesh, overrides or {})
+    rec["policy"] = {k: str(v) for k, v in policy.items()}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build_cell(cfg, shape, mesh, policy)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            rec["memory"] = ha.memory_dict(compiled)      # proves it fits
+            rec["cost_scanned"] = ha.cost_dict(compiled)
+            rec["collectives_scanned"] = ha.collective_mix(
+                compiled.as_text())
+            rec["compile_s"] = round(time.time() - t0, 1)
+            if probes:
+                pc: dict = {}
+                for L in (1, 2):
+                    fnp, argsp = build_cell(cfg, shape, mesh, policy,
+                                            probe_layers=L)
+                    cp = fnp.lower(*argsp).compile()
+                    hlo = cp.as_text()
+                    pc[L] = {"cost": ha.cost_dict(cp),
+                             "wire": ha.wire_bytes(hlo),
+                             "wire_raw": ha.wire_bytes(
+                                 hlo, bf16_dot_correction=False),
+                             "mix": ha.collective_mix(hlo)}
+                Lfull = cfg.n_layers
+                rec["probe"] = {str(k): v for k, v in pc.items()}
+                rec["flops"] = ha.extrapolate(
+                    pc[1]["cost"]["flops"], pc[2]["cost"]["flops"], Lfull)
+                rec["bytes"] = ha.extrapolate(
+                    pc[1]["cost"]["bytes"], pc[2]["cost"]["bytes"], Lfull)
+                rec["wire_bytes"] = ha.extrapolate(
+                    pc[1]["wire"], pc[2]["wire"], Lfull)
+                rec["wire_bytes_raw"] = ha.extrapolate(
+                    pc[1]["wire_raw"], pc[2]["wire_raw"], Lfull)
+                rec["coll_mix"] = {
+                    op: ha.extrapolate(pc[1]["mix"].get(op, 0.0),
+                                       pc[2]["mix"].get(op, 0.0), Lfull)
+                    for op in set(pc[1]["mix"]) | set(pc[2]["mix"])}
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 - cell failures are data
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh_name: str, tag: str = "") -> str:
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="policy override key=value (e.g. attn_block=4096)")
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = (int(v) if v.isdigit()
+                        else v == "True" if v in ("True", "False") else v)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = [args.arch] if args.arch else list(configs.ALL_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = cell_path(arch, shape, mesh_name, args.tag)
+                if args.skip_done and os.path.exists(path):
+                    continue
+                rec = run_cell(arch, shape, mp, probes=not args.no_probes,
+                               overrides=overrides, tag=args.tag)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                n_fail += status == "error"
+                extra = (f" flops/chip={rec.get('flops', 0):.3e}"
+                         if status == "ok" and "flops" in rec else
+                         f" {rec.get('reason', rec.get('error', ''))[:90]}")
+                print(f"[{status:7s}] {arch:22s} {shape:12s} {mesh_name:10s}"
+                      f" {rec.get('total_s', 0):7.1f}s{extra}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,139 @@
+"""Compiled-HLO analysis: collective wire bytes + scan-aware cost model.
+
+XLA's ``cost_analysis()`` counts a ``while`` (lax.scan) body ONCE, so a
+scanned-layer program under-reports FLOPs by ~L (verified in a spike;
+see EXPERIMENTS.md §Roofline methodology).  The dry-run therefore compiles
+two extra *probe* programs per cell — identical sharding/shapes but 1 and 2
+UNROLLED layers — and extrapolates:
+
+    total(L) = probe1 + (L - 1) * (probe2 - probe1)
+
+which attributes embed/unembed/optimizer-scalars exactly once and each
+layer exactly L times.  The same extrapolation applies to the collective
+wire bytes parsed from the probes' HLO text.
+
+Wire-byte model per op (G = replica-group size, B = result bytes,
+ring-algorithm per-chip traffic):
+    all-reduce          2 * B * (G-1)/G
+    all-gather              B * (G-1)/G      (B = gathered output)
+    reduce-scatter          B * (G-1)        (B = scattered output)
+    all-to-all              B * (G-1)/G
+    collective-permute      B
+
+**bf16-dot correction** (on by default): the CPU backend upcasts bf16
+dot_generals to f32 and the SPMD partitioner places partial-sum
+all-reduces before the downcast, so matmul ARs appear at 2x their TPU
+wire bytes (native MXU bf16 keeps them bf16).  f32 collectives whose HLO
+metadata points at a dot_general (or at the bf16 embedding gather) are
+charged at bf16 width.  Both corrected and raw totals are recorded.
+"""
+from __future__ import annotations
+
+import re
+
+_BF16_ARTIFACT_RE = re.compile(
+    r'op_name="[^"]*(dot_general|gather)[^"]*"')
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\])[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _result_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, bf16_dot_correction: bool = True
+                      ) -> list[dict]:
+    """Per-collective (op, result_bytes, group_size, wire_bytes)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        b = _result_bytes(type_str)
+        corrected = False
+        if bf16_dot_correction and "f32[" in type_str and \
+                _BF16_ARTIFACT_RE.search(line):
+            b *= 0.5
+            corrected = True
+        g = 1
+        mi = _GROUPS_ITOTA_RE.search(line)
+        if mi is not None:
+            g = int(mi.group(2))
+        else:
+            ml = _GROUPS_LIST_RE.search(line)
+            if ml is not None:
+                g = len([x for x in ml.group(1).split(",") if x.strip()])
+        if op == "collective-permute":
+            wire = b                      # pairs, not replica groups
+        elif g <= 1:
+            wire = 0.0
+        elif op == "all-reduce":
+            wire = 2 * b * (g - 1) / g
+        elif op in ("all-gather", "all-to-all"):
+            wire = b * (g - 1) / g
+        else:  # reduce-scatter
+            wire = b * (g - 1)
+        out.append({"op": op, "bytes": b, "group": g, "wire": wire,
+                    "bf16_corrected": corrected})
+    return out
+
+
+def wire_bytes(hlo_text: str, bf16_dot_correction: bool = True) -> float:
+    """Total per-chip collective wire bytes of one program execution
+    (scan bodies counted once — use probe extrapolation for totals)."""
+    return sum(c["wire"]
+               for c in parse_collectives(hlo_text, bf16_dot_correction))
+
+
+def collective_mix(hlo_text: str) -> dict[str, float]:
+    mix: dict[str, float] = {}
+    for c in parse_collectives(hlo_text):
+        mix[c["op"]] = mix.get(c["op"], 0.0) + c["wire"]
+    return mix
+
+
+def extrapolate(probe1: float, probe2: float, n_layers: int) -> float:
+    """total(L) = probe1 + (L-1) * (probe2 - probe1); clamped at >= 0."""
+    per_layer = max(probe2 - probe1, 0.0)
+    return probe1 + (n_layers - 1) * per_layer
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ca = ca or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {"argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes)}
+    except Exception as e:  # pragma: no cover - backend specific
+        return {"error": str(e)}

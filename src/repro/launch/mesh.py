@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The dry-run forces 512
+host devices before any jax import; the single-pod mesh then uses the first
+256 (one v5e pod = 16x16 chips), the multi-pod mesh all 512 (2 pods).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"before importing jax for the dry-run)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh() -> Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

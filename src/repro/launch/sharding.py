@@ -1,0 +1,138 @@
+"""Per-(arch x mesh) sharding policy: rules, batch specs, program builders.
+
+``auto_rules`` adapts the logical->mesh table to an architecture: axes that
+do not divide the tensor axis (e.g. 56 query heads or 25 kv-heads on a
+16-way ``"model"`` axis) fall back to replication — GQA archs whose kv
+heads < 16 keep kv replicated (the Megatron GQA rule) while q heads still
+shard when divisible.  ``zero_stage=3`` additionally shards every weight's
+``embed`` dim over the data axes (ZeRO-3 posture; required for the 67B+
+training cells and the 1T serving cells).
+
+``batch_shardings`` maps every ``input_specs`` key to a NamedSharding:
+batch dims over ("pod","data") when divisible, KV caches' head dims over
+``"model"`` when divisible, scalars replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig, SHAPES, ShapeCfg, input_specs
+from repro.models.params import DEFAULT_RULES, ShardingRules
+from repro.models.parallel import ParallelCfg
+
+
+def _div(n: int, size: int) -> bool:
+    return n > 0 and n % size == 0
+
+
+def auto_rules(cfg: ArchConfig, mesh: Mesh, zero_stage: int = 0,
+               seq_shard: bool = False) -> ShardingRules:
+    msize = mesh.shape.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    r = DEFAULT_RULES
+    updates: dict = {}
+    updates["heads"] = "model" if _div(cfg.n_heads, msize) else None
+    updates["kv_heads"] = "model" if _div(cfg.n_kv_heads, msize) else None
+    updates["mlp"] = "model" if _div(cfg.d_ff or 0, msize) or \
+        _div(cfg.n_shared_experts * (cfg.d_ff or 0), msize) else None
+    updates["expert"] = "model" if _div(cfg.n_experts, msize) else None
+    updates["vocab"] = "model" if _div(cfg.padded_vocab, msize) else None
+    updates["ssm_inner"] = "model" if _div(cfg.d_inner, msize) and \
+        cfg.ssm_state else None
+    updates["ssm_heads"] = "model" if _div(cfg.ssm_heads, msize) and \
+        _div(cfg.d_inner, msize) else None
+    updates["batch"] = data_axes
+    updates["fsdp"] = data_axes
+    if zero_stage >= 2:            # stage 2: shard only the expert bank
+        updates["expert_embed"] = data_axes
+    if zero_stage >= 3:            # stage 3: shard every weight's embed dim
+        updates["embed"] = data_axes
+    if seq_shard:
+        updates["act_seq"] = "model"
+    return r.replace(**updates)
+
+
+def make_parallel(cfg: ArchConfig, mesh: Mesh | None, *, zero_stage: int = 0,
+                  seq_shard: bool = False, remat: str = "full",
+                  attn_block: int = 2048, scan_layers: bool = True,
+                  moe_ep: bool = True, ar_barrier: bool = False
+                  ) -> ParallelCfg:
+    # ZeRO-1 shards only optimizer state (dryrun builds those shardings);
+    # the model itself sees replicated-over-data params, i.e. stage 0.
+    model_stage = 0 if zero_stage == 1 else zero_stage
+    rules = (auto_rules(cfg, mesh, model_stage, seq_shard)
+             if mesh is not None else DEFAULT_RULES)
+    return ParallelCfg(mesh=mesh, rules=rules, remat=remat,
+                       scan_layers=scan_layers, attn_block=attn_block,
+                       seq_shard=seq_shard, moe_ep=moe_ep,
+                       zero_stage=model_stage, ar_barrier=ar_barrier)
+
+
+# ---------------------------------------------------------------------------
+# Batch shardings per input_specs key.
+# ---------------------------------------------------------------------------
+
+def _batch_axes_for(B: int, mesh: Mesh) -> tuple[str, ...] | None:
+    """Largest ("pod","data") prefix combination that divides B."""
+    cands = []
+    if "pod" in mesh.axis_names:
+        cands.append(("pod", "data"))
+        cands.append(("pod",))
+    cands.append(("data",))
+    for axes in cands:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if _div(B, size):
+            return axes
+    return None
+
+
+def batch_pspecs(cfg: ArchConfig, shape: str | ShapeCfg, mesh: Mesh,
+                 rules: ShardingRules, kv_seq_shard: bool = False
+                 ) -> dict[str, P]:
+    """``kv_seq_shard``: shard the KV-cache *window* dim over "model" —
+    the decode lever when kv-heads don't divide the tensor axis but the
+    cache doesn't fit a chip (llava-34b x decode_32k: 32 GB/chip -> 2 GB).
+    GSPMD turns the windowed softmax into partial max/sum + tiny ARs."""
+    sc = SHAPES[shape] if isinstance(shape, str) else shape
+    specs = input_specs(cfg, sc)
+    msize = mesh.shape.get("model", 1)
+    out: dict[str, P] = {}
+    for k, s in specs.items():
+        if not s.shape:                       # scalars (pos)
+            out[k] = P()
+            continue
+        if k in ("k_cache", "v_cache"):       # [L, B, W, KVH, dh]
+            bt = _batch_axes_for(s.shape[1], mesh)
+            kv = "model" if _div(s.shape[3], msize) else None
+            if kv_seq_shard and kv is None and _div(s.shape[2], msize):
+                out[k] = P(None, bt, "model", None, None)
+                continue
+            out[k] = P(None, bt, None, kv, None)
+        elif k in ("enc_out", "enc_out_v"):   # [L, B, S, KVH, dh]
+            bt = _batch_axes_for(s.shape[1], mesh)
+            kv = "model" if _div(s.shape[3], msize) else None
+            out[k] = P(None, bt, None, kv, None)
+        elif k == "ssm_state":                # [L, B, H, P, N]
+            bt = _batch_axes_for(s.shape[1], mesh)
+            hs = "model" if _div(s.shape[2], msize) else None
+            out[k] = P(None, bt, hs, None, None)
+        elif k == "conv_state":               # [L, B, K-1, C]
+            bt = _batch_axes_for(s.shape[1], mesh)
+            out[k] = P(None, bt, None, None)
+        else:                                 # [B, ...] tokens/labels/embeds
+            bt = _batch_axes_for(s.shape[0], mesh)
+            out[k] = P(bt, *([None] * (len(s.shape) - 1)))
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, shape, mesh: Mesh,
+                    rules: ShardingRules, kv_seq_shard: bool = False
+                    ) -> dict[str, NamedSharding]:
+    return {k: NamedSharding(mesh, v)
+            for k, v in batch_pspecs(cfg, shape, mesh, rules,
+                                     kv_seq_shard).items()}

@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains *reduced* configs end to end (the ~100M
+example path); on a real slice drop ``--reduced`` and the same code
+shards over the production mesh.  Checkpoint/resume: rerunning the same
+command continues from the latest checkpoint in ``--ckpt-dir``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.launch.sharding import make_parallel
+from repro.models.api import build_model
+from repro.models.common import ShapeCfg
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="shard over the 16x16 mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    par = make_parallel(cfg, mesh, remat="none" if args.reduced else "full")
+    model = build_model(cfg)
+    tc = TrainConfig(
+        steps=args.steps, microbatches=args.microbatches,
+        ckpt_every=args.ckpt_every, log_every=max(args.steps // 20, 1),
+        compress_grads=args.compress_grads,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps))
+    shape = ShapeCfg("cli", "train", args.seq, args.batch)
+    tr = Trainer(model, cfg, par, tc, shape=shape, ckpt_dir=args.ckpt_dir)
+    start = tr.resume()
+    print(f"arch={cfg.name} params={cfg.param_count():,} "
+          f"devices={len(jax.devices())} resumed_at={start}")
+    for m in tr.run():
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}  "
+          f"{m['sec']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

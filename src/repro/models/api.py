@@ -1,0 +1,171 @@
+"""Public model API: ``build_model(cfg)`` -> defs + train/prefill/decode fns.
+
+All forwards are pure functions of (params, batch) suitable for
+``jax.jit`` / ``jax.grad``; the ParallelCfg (jit-static) selects sharding
+and perf levers.  Batch dict keys follow ``repro.models.common.input_specs``
+exactly, so the same functions serve the smoke tests (real arrays, 1
+device) and the multi-pod dry-run (ShapeDtypeStructs, 512 devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import families
+from repro.models.common import ArchConfig
+from repro.models.layers import (cast, chunked_ce_loss, embed_apply,
+                                 embed_defs, logits_apply, norm_apply,
+                                 norm_defs, sinusoidal_pos, unembed_defs)
+from repro.models.parallel import ParallelCfg, batch_spec, constrain
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    defs: dict = {"embed": embed_defs(cfg.padded_vocab, cfg.d_model)}
+    defs["blocks"] = families.stack_defs(families.block_defs(cfg),
+                                         cfg.n_layers)
+    defs["final_norm"] = norm_defs(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        defs["unembed"] = unembed_defs(cfg.d_model, cfg.padded_vocab)
+    if cfg.n_encoder_layers:
+        defs["encoder"] = families.stack_defs(
+            families.block_defs(cfg, encoder=True), cfg.n_encoder_layers)
+        defs["enc_norm"] = norm_defs(cfg.d_model, cfg.norm)
+    return defs
+
+
+def _logits(params: dict, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h,
+                          cast(params["embed"]["table"])).astype(jnp.float32)
+    return logits_apply(params["unembed"], h)
+
+
+def _embed_in(params, cfg: ArchConfig, par: ParallelCfg, batch: dict,
+              decode: bool = False):
+    """Token (+ stub-frontend) embedding. Returns (x [B,S,D], q_offset)."""
+    if decode:
+        return embed_apply(params["embed"], batch["token"]), 0
+    x = embed_apply(params["embed"], batch["tokens"])
+    q_offset = 0
+    if cfg.frontend == "vision_stub":
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], 1)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model)
+    return x, q_offset
+
+
+def _run_encoder(params, cfg: ArchConfig, par: ParallelCfg, frames):
+    x = frames.astype(jnp.bfloat16)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(x.shape[1], cfg.d_model)
+    x = constrain(x, par, batch_spec(par, None, None))
+    x, _, _ = families.stack_apply(
+        params["encoder"], x, cfg, par, mode="prefill",
+        n_layers=cfg.n_encoder_layers, causal=False)
+    return norm_apply(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Train forward (loss).
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig, par: ParallelCfg
+            ) -> jnp.ndarray:
+    x, q_offset = _embed_in(params, cfg, par, batch)
+    x = constrain(x, par, batch_spec(par, "model" if par.seq_shard else None,
+                                     None))
+    enc = None
+    if cfg.n_encoder_layers:
+        enc = _run_encoder(params, cfg, par, batch["frame_embeds"])
+    x, _, aux = families.stack_apply(
+        params["blocks"], x, cfg, par, mode="train", n_layers=cfg.n_layers,
+        q_offset=q_offset, enc=enc)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if cfg.frontend == "vision_stub":          # loss only on text positions
+        x = x[:, batch["patch_embeds"].shape[1]:]
+    unemb = ({"w": params["embed"]["table"].T} if cfg.tie_embeddings
+             else params["unembed"])
+    loss = chunked_ce_loss(unemb, x, batch["labels"], chunk=par.loss_chunk)
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_weight * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serve forwards.
+# ---------------------------------------------------------------------------
+
+def _caches_out(new_caches: dict) -> dict:
+    out = {}
+    if "k" in new_caches:
+        out["k_cache"], out["v_cache"] = new_caches["k"], new_caches["v"]
+    if "h" in new_caches:
+        out["ssm_state"], out["conv_state"] = (new_caches["h"],
+                                               new_caches["conv"])
+    if "ck" in new_caches:
+        out["enc_out"], out["enc_out_v"] = new_caches["ck"], new_caches["cv"]
+    return out
+
+
+def prefill_fn(params: dict, batch: dict, cfg: ArchConfig, par: ParallelCfg):
+    """Full-sequence forward -> (last-position logits [B, V], caches).
+
+    The caches (stacked [L, ...]) feed ``decode_fn`` directly — this is the
+    serve-engine prefill step, and what the ``prefill_32k`` cells lower.
+    """
+    x, q_offset = _embed_in(params, cfg, par, batch)
+    enc = None
+    if cfg.n_encoder_layers:
+        enc = _run_encoder(params, cfg, par, batch["frame_embeds"])
+    x, new_caches, _ = families.stack_apply(
+        params["blocks"], x, cfg, par, mode="prefill",
+        n_layers=cfg.n_layers, q_offset=q_offset, enc=enc)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return _logits(params, cfg, x[:, -1]), _caches_out(new_caches)
+
+
+def decode_fn(params: dict, batch: dict, cfg: ArchConfig, par: ParallelCfg):
+    """One decode step. batch: token [B,1], pos scalar, + caches [L,...].
+
+    Returns (logits [B, V], new_caches dict).
+    """
+    x, _ = _embed_in(params, cfg, par, batch, decode=True)
+    if cfg.pos == "sinusoidal":
+        posv = jnp.broadcast_to(batch["pos"], (x.shape[0],))
+        d = cfg.d_model
+        div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                      * (-jnp.log(10000.0) / d))
+        ang = posv[:, None].astype(jnp.float32) * div
+        pe = jnp.zeros((x.shape[0], d), jnp.float32)
+        pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        x = x + pe[:, None].astype(x.dtype)
+    caches: dict = {}
+    if "k_cache" in batch:
+        caches["k"], caches["v"] = batch["k_cache"], batch["v_cache"]
+    if "ssm_state" in batch:
+        caches["h"], caches["conv"] = batch["ssm_state"], batch["conv_state"]
+    if "enc_out" in batch:
+        caches["ck"], caches["cv"] = batch["enc_out"], batch["enc_out_v"]
+    x, new_caches, _ = families.stack_apply(
+        params["blocks"], x, cfg, par, mode="decode",
+        n_layers=cfg.n_layers, pos=batch["pos"], caches=caches)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, 0])
+    return logits, _caches_out(new_caches)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    defs: dict
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, defs=model_defs(cfg), loss=loss_fn,
+                 prefill=prefill_fn, decode=decode_fn)

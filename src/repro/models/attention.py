@@ -1,0 +1,296 @@
+"""Attention: GQA projections + flash-style blockwise computation + KV cache.
+
+Three compute paths, all numerically the online-softmax algorithm:
+
+* :func:`flash_unrolled` — causal path for train/prefill.  Python-unrolled
+  q×kv block triangle with *static* slice bounds, so fully-masked block
+  pairs are never emitted into the HLO: compiled FLOPs match the causal
+  ideal S²/2 (the naive masked formulation wastes 2×; this is a §Perf
+  lever that is on by default).
+* :func:`flash_scan` — general path (cross-attention, non-causal): nested
+  ``lax.scan`` over q/kv blocks, O(block²) live memory.
+* :func:`decode_step` — single-token attention against a (ring-buffered)
+  KV cache for serve/decode shapes.
+
+The Pallas TPU kernel (``repro.kernels.flash_attention``) implements the
+same tiling for the MXU; ``par.use_pallas`` switches to it (validated in
+interpret mode against these jnp paths — see tests).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig
+from repro.models.layers import apply_rope, cast
+from repro.models.params import ParamDef
+from repro.models.parallel import ParallelCfg, batch_spec, constrain
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree.
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ArchConfig, cross: bool = False) -> dict:
+    D, H, KVH, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((D, H, dh), ("embed", "heads", "head"), init="scaled"),
+        "wk": ParamDef((D, KVH, dh), ("embed", "kv_heads", "head"),
+                       init="scaled"),
+        "wv": ParamDef((D, KVH, dh), ("embed", "kv_heads", "head"),
+                       init="scaled"),
+        "wo": ParamDef((H, dh, D), ("heads", "head", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, dh), ("heads", "head"), init="zeros")
+        defs["bk"] = ParamDef((KVH, dh), ("kv_heads", "head"), init="zeros")
+        defs["bv"] = ParamDef((KVH, dh), ("kv_heads", "head"), init="zeros")
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = ParamDef((dh,), ("head",), init="ones")
+        defs["k_norm"] = ParamDef((dh,), ("head",), init="ones")
+    return defs
+
+
+def _head_rms(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax block update (shared by both flash paths).
+# ---------------------------------------------------------------------------
+
+def _block_update(carry, q_blk, k_blk, v_blk, mask, scale):
+    """One (q-block, kv-block) online-softmax step.
+
+    q_blk [B, bq, K, G, h]; k/v_blk [B, bk, K, h]; mask [bq, bk] bool or None.
+    carry = (m [B,K,G,bq], l [B,K,G,bq], acc [B,K,G,bq,h]) fp32.
+    """
+    m, l, acc = carry
+    s = jnp.einsum("bqkgh,bvkh->bkgqv", q_blk, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(-1))
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * corr + p.sum(-1)
+    pv = jnp.einsum("bkgqv,bvkh->bkgqh", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32)
+    acc = acc * corr[..., None] + pv
+    return m_new, l, acc
+
+
+def _finish(m, l, acc, dtype):
+    out = acc / jnp.maximum(l, 1e-30)[..., None]        # [B,K,G,bq,h]
+    return out.transpose(0, 3, 1, 2, 4).astype(dtype)   # [B,bq,K,G,h]
+
+
+def _init_carry(B, K, G, bq, h):
+    return (jnp.full((B, K, G, bq), NEG_INF),
+            jnp.zeros((B, K, G, bq), jnp.float32),
+            jnp.zeros((B, K, G, bq, h), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Causal flash with static block skipping (train / prefill).
+# ---------------------------------------------------------------------------
+
+def flash_unrolled(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   block: int = 2048, window: int = 0,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """Causal attention. q [B,Sq,K,G,h]; k,v [B,Skv,K,h]; returns like q.
+
+    ``q_offset``: absolute position of q row 0 relative to k row 0 (prefix
+    tokens). ``window > 0``: sliding-window causal attention.
+    """
+    B, Sq, K, G, h = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(h)
+    bq = min(block, Sq)
+    bk = min(block, Skv)
+    nq, nk = -(-Sq // bq), -(-Skv // bk)
+    outs = []
+    for qi in range(nq):
+        q0 = qi * bq
+        cq = min(bq, Sq - q0)
+        q_blk = jax.lax.slice_in_dim(q, q0, q0 + cq, axis=1)
+        q_lo, q_hi = q_offset + q0, q_offset + q0 + cq - 1  # abs pos range
+        carry = _init_carry(B, K, G, cq, h)
+        for kj in range(nk):
+            k0 = kj * bk
+            ck = min(bk, Skv - k0)
+            k_hi = k0 + ck - 1
+            if k0 > q_hi:
+                continue                     # fully above the diagonal
+            if window and k_hi < q_lo - window + 1:
+                continue                     # fully below the window
+            k_blk = jax.lax.slice_in_dim(k, k0, k0 + ck, axis=1)
+            v_blk = jax.lax.slice_in_dim(v, k0, k0 + ck, axis=1)
+            diag = k_hi > q_lo               # needs causal masking
+            edge = window and (k0 < q_hi - window + 1)
+            mask = None
+            if diag or edge:
+                qpos = q_lo + jnp.arange(cq)
+                kpos = k0 + jnp.arange(ck)
+                mask = kpos[None, :] <= qpos[:, None]
+                if window:
+                    mask &= kpos[None, :] > qpos[:, None] - window
+            carry = _block_update(carry, q_blk, k_blk, v_blk, mask, scale)
+        outs.append(_finish(*carry, q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# General flash via nested scan (cross-attention / non-causal).
+# ---------------------------------------------------------------------------
+
+def flash_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+               block_q: int = 1024, block_k: int = 2048) -> jnp.ndarray:
+    """Non-causal attention, O(block²) live memory. Shapes as above."""
+    B, Sq, K, G, h = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(h)
+    bq = math.gcd(min(block_q, Sq), Sq)
+    bk = math.gcd(min(block_k, Skv), Skv)
+    nq, nk = Sq // bq, Skv // bk
+    qs = q.reshape(B, nq, bq, K, G, h).swapaxes(0, 1)
+    ks = k.reshape(B, nk, bk, K, h).swapaxes(0, 1)
+    vs = v.reshape(B, nk, bk, K, h).swapaxes(0, 1)
+
+    def per_q(_, q_blk):
+        def kv_body(carry, kv):
+            k_blk, v_blk = kv
+            return _block_update(carry, q_blk, k_blk, v_blk, None, scale), None
+        carry, _ = jax.lax.scan(kv_body, _init_carry(B, K, G, bq, h),
+                                (ks, vs))
+        return None, _finish(*carry, q.dtype)
+
+    _, out = jax.lax.scan(per_q, None, qs)              # [nq, B, bq, K, G, h]
+    return out.swapaxes(0, 1).reshape(B, Sq, K, G, h)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token vs. a KV cache (ring buffer when windowed).
+# ---------------------------------------------------------------------------
+
+def decode_step(q: jnp.ndarray, new_k: jnp.ndarray, new_v: jnp.ndarray,
+                k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                pos: jnp.ndarray, window: int = 0):
+    """q [B,1,K,G,h]; new_k/v [B,1,K,h]; caches [B,W,K,h]; pos int32 scalar
+    or per-lane [B] (continuous batching: lanes at different depths).
+
+    Returns (out [B,1,K,G,h], k_cache, v_cache).  With ``window`` the cache
+    is a ring buffer of W slots; otherwise W covers the full horizon.
+    """
+    B, W = k_cache.shape[0], k_cache.shape[1]
+    h = q.shape[-1]
+    scale = 1.0 / math.sqrt(h)
+    pos = jnp.broadcast_to(pos, (B,)).astype(jnp.int32)
+    idx = pos % W if window else jnp.minimum(pos, W - 1)
+    lane = jnp.arange(B)
+    k_cache = k_cache.at[lane, idx].set(new_k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[lane, idx].set(new_v[:, 0].astype(v_cache.dtype))
+    slots = jnp.arange(W)
+    valid = slots[None, :] <= pos[:, None]               # [B, W]
+    if window:
+        valid = valid | (pos[:, None] >= W)              # ring full: all live
+    s = jnp.einsum("bqkgh,bwkh->bkgqw", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqw,bwkh->bqkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Full attention sub-layer.
+# ---------------------------------------------------------------------------
+
+def attn_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, par: ParallelCfg,
+               *, mode: str = "train", pos=None, cache: dict | None = None,
+               kv_x: jnp.ndarray | None = None, causal: bool = True,
+               q_offset: int = 0, layer_tag: str = ""):
+    """GQA attention. mode: train|prefill (full seq) or decode (1 token).
+
+    ``cache``: {"k","v"} [B,W,KVH,dh] (+ "pos" handled by caller) for decode;
+    for cross-attention decode, pass precomputed k/v via ``cache`` with
+    ``kv_x=None`` and ``mode='cross_cached'``.
+    Returns (out [B,S,D], new_cache_or_None).
+    """
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KVH
+    B, S, _ = x.shape
+
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    if "bq" in p:
+        q = q + cast(p["bq"])
+    src = x if kv_x is None else kv_x
+    if mode != "cross_cached":
+        k = jnp.einsum("bsd,dhk->bshk", src, cast(p["wk"]))
+        v = jnp.einsum("bsd,dhk->bshk", src, cast(p["wv"]))
+        if "bk" in p:
+            k, v = k + cast(p["bk"]), v + cast(p["bv"])
+    if "q_norm" in p:
+        q = _head_rms(q, p["q_norm"], cfg.norm_eps)
+        if mode != "cross_cached":
+            k = _head_rms(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos == "rope" and kv_x is None and mode != "cross_cached":
+        qpos = pos if pos is not None else jnp.arange(S) + q_offset
+        if qpos.ndim == 0:
+            qpos = qpos[None]                        # scalar pos -> [S=1]
+        elif qpos.ndim == 1 and mode == "decode":
+            qpos = qpos[:, None]                     # per-lane pos -> [B,1]
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k = apply_rope(k, qpos, cfg.rope_theta)
+
+    # Shard heads over the tensor axis.
+    hspec = batch_spec(par, None, "model", None)
+    q = constrain(q, par, hspec)
+    qg = q.reshape(B, S, KVH, G, dh)
+
+    new_cache = None
+    if mode == "decode":
+        out, kc, vc = decode_step(qg, k, v, cache["k"], cache["v"], pos,
+                                  window=cfg.attn_window)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "cross_cached":
+        kc, vc = cache["k"], cache["v"]
+        s = jnp.einsum("bqkgh,bwkh->bkgqw", qg, kc,
+                       preferred_element_type=jnp.float32) / math.sqrt(dh)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqw,bwkh->bqkgh", pr.astype(vc.dtype), vc
+                         ).astype(x.dtype)
+    elif not causal:
+        out = flash_scan(qg, k, v, block_q=par.attn_block // 2,
+                         block_k=par.attn_block)
+        if mode == "prefill" and kv_x is not None:
+            new_cache = {"k": k, "v": v}           # cross-attn KV for decode
+    else:
+        out = flash_unrolled(qg, k, v, block=par.attn_block,
+                             window=cfg.attn_window, q_offset=q_offset)
+        if mode == "prefill" and kv_x is None:
+            # Serve prefill: emit the KV cache (ring-ordered when windowed
+            # so decode_step's ``pos % W`` indexing lines up).
+            W = cfg.attn_window
+            if W and S >= W:
+                slots = (S - W + jnp.arange(W)) % W
+                kc = jnp.zeros((B, W) + k.shape[2:], k.dtype
+                               ).at[:, slots].set(k[:, -W:])
+                vc = jnp.zeros((B, W) + v.shape[2:], v.dtype
+                               ).at[:, slots].set(v[:, -W:])
+                new_cache = {"k": kc, "v": vc}
+            else:
+                new_cache = {"k": k, "v": v}
+
+    out = out.reshape(B, S, H, dh)
+    out = constrain(out, par, hspec)
+    y = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"]))
+    return y, new_cache

@@ -1,0 +1,186 @@
+"""Per-family transformer block assembly + the scanned layer stack.
+
+One decoder block is built per family:
+  dense / vlm : attn -> mlp                      (pre-norm residual)
+  moe         : attn -> moe ffn (+ aux loss)
+  ssm         : mamba2 mixer only (mamba has no separate FFN)
+  hybrid      : parallel attn + mamba heads on the same normed input
+                (outputs mean-combined, Hymba-style) -> mlp
+  encdec      : self-attn -> cross-attn -> mlp   (whisper decoder);
+                encoder blocks are non-causal attn -> mlp.
+
+Layers are stacked with ``lax.scan`` over parameters whose leading axis is
+the layer index — HLO size stays O(1) in depth, and the scan body is the
+activation-checkpointing (remat) boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models import attention, moe as moe_mod, ssm as ssm_mod
+from repro.models.common import ArchConfig
+from repro.models.layers import mlp_apply, mlp_defs, norm_apply, norm_defs
+from repro.models.params import ParamDef, tree_map_defs
+from repro.models.parallel import ParallelCfg
+
+
+def stack_defs(defs, n_layers: int):
+    """Prepend a ``layer`` axis of size L to every ParamDef in the tree."""
+    return tree_map_defs(
+        lambda d: ParamDef((n_layers,) + d.shape, ("layer",) + d.logical,
+                           init=d.init, dtype=d.dtype, scale=d.scale), defs)
+
+
+# ---------------------------------------------------------------------------
+# Single block (one layer) defs/apply.
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ArchConfig, encoder: bool = False) -> dict:
+    d = {}
+    D, kind = cfg.d_model, cfg.norm
+    if cfg.family == "ssm":
+        d["norm1"] = norm_defs(D, kind)
+        d["ssm"] = ssm_mod.ssm_defs(cfg)
+        return d
+    d["norm1"] = norm_defs(D, kind)
+    d["attn"] = attention.attn_defs(cfg)
+    if cfg.family == "hybrid":
+        d["ssm"] = ssm_mod.ssm_defs(cfg)
+    if cfg.family == "encdec" and not encoder:
+        d["norm_x"] = norm_defs(D, kind)
+        d["cross"] = attention.attn_defs(cfg, cross=True)
+    d["norm2"] = norm_defs(D, kind)
+    if cfg.family == "moe":
+        d["moe"] = moe_mod.moe_defs(cfg)
+    elif cfg.d_ff:
+        d["mlp"] = mlp_defs(D, cfg.d_ff, cfg.act)
+    return d
+
+
+def block_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, par: ParallelCfg,
+                *, mode: str, pos=None, cache: dict | None = None,
+                causal: bool = True, q_offset: int = 0,
+                enc: jnp.ndarray | None = None):
+    """One decoder/encoder block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict = {}
+    kind, eps = cfg.norm, cfg.norm_eps
+    h = norm_apply(p["norm1"], x, kind, eps)
+
+    if cfg.family == "ssm":
+        y, st = ssm_mod.ssm_apply(p["ssm"], h, cfg, par, mode=mode,
+                                  state=cache)
+        if st is not None:
+            new_cache.update(st)
+        return x + y, new_cache, aux
+
+    attn_cache = {k: cache[k] for k in ("k", "v")} if cache and "k" in cache \
+        else None
+    y, ac = attention.attn_apply(
+        p["attn"], h, cfg, par, mode=mode, pos=pos, cache=attn_cache,
+        causal=causal, q_offset=q_offset)
+    if par.ar_barrier:
+        y = jax.lax.optimization_barrier(y)
+    if par.remat == "tp_out":
+        y = jax.ad_checkpoint.checkpoint_name(y, "tp_out")
+    if ac is not None:
+        new_cache.update(ac)
+
+    if cfg.family == "hybrid":
+        # Hymba: attention and mamba heads read the SAME normed input in
+        # parallel; their (pre-norm) outputs are mean-combined.
+        sst = {"h": cache["h"], "conv": cache["conv"]} if cache and "h" in cache else None
+        ys, st = ssm_mod.ssm_apply(p["ssm"], h, cfg, par, mode=mode,
+                                   state=sst)
+        y = 0.5 * (y + ys)
+        if st is not None:
+            new_cache.update(st)
+    x = x + y
+
+    if "cross" in p:
+        h = norm_apply(p["norm_x"], x, kind, eps)
+        if mode == "decode":
+            y, _ = attention.attn_apply(
+                p["cross"], h, cfg, par, mode="cross_cached",
+                cache={"k": cache["ck"], "v": cache["cv"]})
+            new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+        else:
+            y, cc = attention.attn_apply(p["cross"], h, cfg, par, mode=mode,
+                                         kv_x=enc, causal=False)
+            if cc is not None:
+                new_cache["ck"], new_cache["cv"] = cc["k"], cc["v"]
+        x = x + y
+
+    h = norm_apply(p["norm2"], x, kind, eps)
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg, par)
+    elif cfg.d_ff:
+        y = mlp_apply(p["mlp"], h, cfg.act)
+    else:
+        y = jnp.zeros_like(x)
+    if par.ar_barrier:
+        y = jax.lax.optimization_barrier(y)
+    if par.remat == "tp_out":
+        y = jax.ad_checkpoint.checkpoint_name(y, "tp_out")
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Scanned layer stack.
+# ---------------------------------------------------------------------------
+
+def _remat(fn, par: ParallelCfg):
+    if par.remat == "none":
+        return fn
+    if par.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif par.remat == "tp_out":
+        # Save exactly the tensor-parallel sublayer outputs: their partial
+        # sums were all-reduced in the forward pass, and "full" remat would
+        # replay those collectives in the backward (6 ARs/layer instead of
+        # 4 — §Perf deepseek iteration).  Costs one saved [B,S,D] per
+        # sublayer per layer.
+        policy = jax.checkpoint_policies.save_only_these_names("tp_out")
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def stack_apply(stacked: dict, x: jnp.ndarray, cfg: ArchConfig,
+                par: ParallelCfg, *, mode: str, n_layers: int, pos=None,
+                caches: dict | None = None, causal: bool = True,
+                q_offset: int = 0, enc: jnp.ndarray | None = None):
+    """Run ``n_layers`` blocks via lax.scan over the stacked param tree.
+
+    ``caches``: dict of [L, ...] arrays for decode (returned updated).
+    ``enc``: encoder output broadcast to every decoder layer (encdec train).
+    Returns (x, new_caches, aux_total).
+    """
+    caches = caches if caches is not None else {}
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, lc = xs
+        h, nc, a = block_apply(lp, h, cfg, par, mode=mode, pos=pos,
+                               cache=lc, causal=causal, q_offset=q_offset,
+                               enc=enc)
+        return (h, aux + a), nc
+
+    if mode == "train":
+        body = _remat(body, par)
+    if par.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), (stacked, caches))
+    else:
+        aux = jnp.float32(0.0)
+        outs = []
+        for i in range(n_layers):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            lc = jax.tree.map(lambda a: a[i], caches)
+            (x, aux), nc = body((x, aux), (lp, lc))
+            outs.append(nc)
+        new_caches = (jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                      if outs and outs[0] else {})
+    return x, new_caches, aux

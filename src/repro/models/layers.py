@@ -1,0 +1,156 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, embeddings, loss.
+
+Pure-functional: ``*_defs(cfg)`` returns a :class:`~repro.models.params.ParamDef`
+tree, ``*_apply(params, x, ...)`` consumes the materialized (or scanned) tree.
+All activations run in bf16 with fp32 norms/softmax (the production policy);
+parameters are stored fp32 and cast at use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def norm_defs(d: int, kind: str = "rmsnorm") -> dict:
+    out = {"scale": ParamDef((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        out["bias"] = ParamDef((d,), ("embed",), init="zeros")
+    return out
+
+
+def norm_apply(p: dict, x: jnp.ndarray, kind: str = "rmsnorm",
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+        xf = xf + p["bias"].astype(jnp.float32)
+    return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, dh]; pos [..., S] int32 absolute positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs    # [..., S, dh/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int, offset: jnp.ndarray | int = 0
+                   ) -> jnp.ndarray:
+    """Classic transformer sinusoids (whisper-style), bf16 [S, d]."""
+    pos = (jnp.arange(seq) + offset)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): silu-GLU (llama/qwen), gelu (whisper), relu^2 (nemotron).
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d: int, f: int, act: str) -> dict:
+    glu = act.endswith("_glu")
+    out = {"w_in": ParamDef((d, (2 if glu else 1), f),
+                            ("embed", None, "mlp"), init="scaled")}
+    out["w_out"] = ParamDef((f, d), ("mlp", "embed"), init="scaled")
+    return out
+
+
+def activation(h: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu_glu":
+        return jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    if act == "gelu":
+        return jax.nn.gelu(h[..., 0, :], approximate=True)
+    if act == "relu2":
+        r = jax.nn.relu(h[..., 0, :])
+        return r * r
+    raise ValueError(f"unknown act {act!r}")
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = jnp.einsum("...d,dgf->...gf", x, cast(p["w_in"]))
+    h = activation(h, act)
+    return jnp.einsum("...f,fd->...d", h, cast(p["w_out"]))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings and the (chunked) LM loss.
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d: int) -> dict:
+    return {"table": ParamDef((vocab, d), ("vocab", "embed"), init="normal")}
+
+
+def embed_apply(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return cast(p["table"])[tokens]
+
+
+def unembed_defs(d: int, vocab: int) -> dict:
+    return {"w": ParamDef((d, vocab), ("embed", "vocab"), init="scaled")}
+
+
+def logits_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,dv->...v", x, cast(p["w"])).astype(jnp.float32)
+
+
+def chunked_ce_loss(unembed: dict, h: jnp.ndarray, labels: jnp.ndarray,
+                    mask: jnp.ndarray | None = None,
+                    chunk: int = 1024) -> jnp.ndarray:
+    """Cross-entropy without materializing [B, S, V] — scan over seq chunks.
+
+    ``h`` [B, S, D] final hidden states; ``labels`` [B, S] int32 (next-token
+    ids; -1 = ignore). Returns mean loss over unmasked positions.
+    """
+    B, S, D = h.shape
+    if mask is None:
+        mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+    hc = h.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hx, lx, mx = xs
+        logits = logits_apply(unembed, hx)              # [B, c, V] fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], -1)[..., 0]
+        nll = jnp.where(mx, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + mx.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)

@@ -1,0 +1,70 @@
+"""Parallelism configuration threaded through every model apply.
+
+``ParallelCfg`` is hashable (jit-static) and carries the mesh, the
+logical-to-mesh sharding rules, and the perf levers the hillclimb iterates
+on (attention block size, remat policy, MoE dispatch, sequence sharding).
+With ``mesh=None`` every constraint is a no-op and all paths degrade to
+single-device jnp — that is the CPU smoke-test mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import DEFAULT_RULES, ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCfg:
+    mesh: Mesh | None = None
+    rules: ShardingRules = DEFAULT_RULES
+    remat: str = "full"          # full | dots | none  (scan-over-layers policy)
+    scan_layers: bool = True
+    attn_block: int = 2048       # flash block size (q and kv)
+    loss_chunk: int = 1024       # CE loss seq chunk
+    moe_ep: bool = True          # shard_map expert parallelism when mesh set
+    seq_shard: bool = False      # shard activation seq axis on "model"
+    use_pallas: bool = False     # TPU Pallas kernels (tests run interpret)
+    zero_stage: int = 0          # 0/1: replicate params over data; 3: fsdp
+    ar_barrier: bool = False     # pin TP all-reduces to bf16 (§Perf lever):
+    # an optimization_barrier after each TP einsum stops the partitioner
+    # from folding downstream f32 converts into the dot, which would make
+    # the partial-sum all-reduce run at 2x wire bytes.
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def model_axis_size(self) -> int:
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape["model"]
+
+    def effective_rules(self) -> ShardingRules:
+        r = self.rules
+        if self.mesh is not None and "pod" in self.mesh.axis_names:
+            r = r.replace(batch=("pod", "data"),
+                          fsdp=("pod", "data") if self.zero_stage else None)
+        if self.zero_stage >= 3:
+            # ZeRO-3 posture: embed dim of big weights sharded over data.
+            r = r.replace(embed=r.mesh_axes("fsdp"))
+        if self.seq_shard:
+            r = r.replace(act_seq="model")
+        return r
+
+
+def constrain(x, par: ParallelCfg, spec: P):
+    """with_sharding_constraint that no-ops without a mesh (smoke mode)."""
+    if par.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(par.mesh, spec))
+
+
+def batch_spec(par: ParallelCfg, *rest) -> P:
+    axes = par.batch_axes
+    return P(axes if axes else None, *rest)

@@ -1,0 +1,172 @@
+"""Parameter trees with logical sharding axes (MaxText-style).
+
+Every layer builder returns a nested dict of :class:`ParamDef` leaves.  A
+``ParamDef`` carries the shape, dtype, an *initializer name* and a tuple of
+*logical axis names* — one per dimension.  Logical names are mapped to mesh
+axes by a :class:`ShardingRules` table, so re-sharding the whole model (a
+perf-hillclimb lever) is a one-line rule change, never a model edit.
+
+Three consumers:
+  * ``init_params``  — materialize real arrays (smoke tests / examples).
+  * ``param_specs``  — ``jax.ShapeDtypeStruct`` tree (multi-pod dry-run;
+                       nothing is allocated).
+  * ``param_shardings`` — ``NamedSharding`` tree for pjit in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[Any, ...]              # logical axis name (or None) per dim
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    dtype: Any = jnp.float32
+    scale: float = 1.0                    # stddev multiplier for normal/scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# Logical-axis -> mesh-axis rules. A mesh axis may appear at most once per
+# param (XLA requirement); `fsdp` composes ("pod","data") on the multi-pod
+# mesh so optimizer state shards across every chip (ZeRO-3 posture).
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple[tuple[str, Any], ...] = (
+        ("vocab", "model"),
+        ("embed", None),          # d_model replicated by default
+        ("heads", "model"),       # attention heads -> tensor parallel
+        ("kv_heads", "model"),
+        ("mlp", "model"),         # ffn hidden -> tensor parallel
+        ("expert", "model"),      # MoE experts -> expert parallel
+        ("expert_mlp", None),     # per-expert hidden dim
+        ("fsdp", ("data",)),      # ZeRO axis for 2D-sharded big params
+        ("layer", None),
+        ("seq", None),
+        ("ssm_inner", "model"),
+        ("ssm_state", None),
+        ("conv", None),
+        ("batch", ("data",)),     # activation batch axis (single-pod)
+        ("act_seq", None),        # activation sequence axis
+    )
+
+    def mesh_axes(self, logical: Any):
+        for name, ax in self.rules:
+            if name == logical:
+                return ax
+        return None
+
+    def spec(self, logical_axes: tuple[Any, ...]) -> P:
+        used: list[Any] = []
+        out = []
+        for lg in logical_axes:
+            ax = self.mesh_axes(lg) if lg is not None else None
+            # A mesh axis can only be used once per array.
+            if ax is not None:
+                flat = ax if isinstance(ax, tuple) else (ax,)
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.extend(flat)
+            out.append(ax)
+        return P(*out)
+
+    def replace(self, **updates: Any) -> "ShardingRules":
+        table = dict(self.rules)
+        table.update(updates)
+        return ShardingRules(tuple(table.items()))
+
+    def for_multipod(self) -> "ShardingRules":
+        """Fold the pod axis into batch + fsdp sharding."""
+        return self.replace(batch=("pod", "data"), fsdp=("pod", "data"))
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=_is_def)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # For matmul weights [in, out] (our convention), fan-in = prod of all
+    # dims except the last.
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return max(int(np.prod(shape[:-1])), 1)
+
+
+def init_params(key: jax.Array, tree, dtype_override=None):
+    """Materialize a ParamDef tree into real arrays (smoke / examples)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, d: ParamDef):
+        dt = dtype_override or d.dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "normal":
+            return (d.scale * 0.02 * jax.random.normal(k, d.shape)).astype(dt)
+        if d.init == "scaled":  # 1/sqrt(fan_in)
+            std = d.scale / math.sqrt(_fan_in(d.shape))
+            return (std * jax.random.normal(k, d.shape)).astype(dt)
+        raise ValueError(f"unknown init {d.init!r}")
+
+    return jax.tree.unflatten(treedef, [one(k, d) for k, d in zip(keys, leaves)])
+
+
+def param_specs(tree):
+    """ShapeDtypeStruct tree — the dry-run stand-in (no allocation)."""
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def logical_specs(tree):
+    """PartitionSpec-source tree (logical axes per param)."""
+    return tree_map_defs(lambda d: d.logical, tree)
+
+
+def param_pspecs(tree, rules: ShardingRules = DEFAULT_RULES):
+    return tree_map_defs(lambda d: rules.spec(d.logical), tree)
+
+
+def param_shardings(tree, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    return tree_map_defs(lambda d: NamedSharding(mesh, rules.spec(d.logical)),
+                         tree)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_def)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def sharded_size_bytes(tree, rules: ShardingRules, mesh_shape: dict[str, int]
+                       ) -> int:
+    """Max per-device bytes of the param tree under `rules` on a mesh of the
+    given axis sizes — the napkin-math half of memory_analysis()."""
+    total = 0
+    for d in jax.tree.leaves(tree, is_leaf=_is_def):
+        n = int(np.prod(d.shape))
+        shards = 1
+        for lg in d.logical:
+            ax = rules.mesh_axes(lg) if lg is not None else None
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shards *= mesh_shape.get(a, 1)
+        total += math.ceil(n / shards) * jnp.dtype(d.dtype).itemsize
+    return total

@@ -1,0 +1,223 @@
+"""Mamba2 (state-space duality / SSD) mixer — chunked train path + decode.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence into
+chunks of ``Q`` steps: within a chunk the recurrence is computed as a
+masked quadratic form (MXU-friendly), and a single ``lax.scan`` over chunk
+*states* [H, P, N] carries information between chunks — O(S·Q) work with a
+constant-size recurrent state, which is why the ssm/hybrid archs are the
+ones that run the ``long_500k`` shape.
+
+Projections are stored split (z / x / BC / dt) so tensor-parallel sharding
+stays clean: the inner dim (and its heads) shard over ``"model"``, while
+the small shared B/C streams stay replicated.  The depthwise conv is two
+shift-multiply einsums (one per stream family), not ``conv_general_dilated``
+— identical math, trivially shardable.
+
+``repro.kernels.ssd_scan`` is the Pallas TPU kernel for the chunk kernel;
+this module is its jnp reference and the dry-run path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig
+from repro.models.layers import cast
+from repro.models.params import ParamDef
+from repro.models.parallel import ParallelCfg, batch_spec, constrain
+
+
+def ssm_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    return {
+        "wz": ParamDef((D, di), ("embed", "ssm_inner"), init="scaled"),
+        "wx": ParamDef((D, di), ("embed", "ssm_inner"), init="scaled"),
+        "wbc": ParamDef((D, 2 * G * N), ("embed", None), init="scaled"),
+        "wdt": ParamDef((D, H), ("embed", "ssm_heads"), init="scaled"),
+        "conv_x": ParamDef((K, di), ("conv", "ssm_inner"), init="scaled"),
+        "conv_bc": ParamDef((K, 2 * G * N), ("conv", None), init="scaled"),
+        "conv_bias_x": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "conv_bias_bc": ParamDef((2 * G * N,), (None,), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "Dskip": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "norm": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "out": ParamDef((di, D), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv as K shifted einsums. x [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(pad[:, i:i + S] * cast(w)[i] for i in range(K))
+    return out + cast(b)
+
+
+def _segsum(dA: jnp.ndarray) -> jnp.ndarray:
+    """dA [..., Q] -> L [..., Q, Q]: L[i,j] = sum_{j<t<=i} dA[t], -inf i<j."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h0: jnp.ndarray | None = None):
+    """Chunked SSD. x [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (<0);
+    Bm, Cm [B,S,G,N]. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    if S % Q:                       # pad: dt=0 steps are identity on state
+        pad = Q - S % Q
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)]  # noqa: E731
+                                 + [(0, 0)] * (a.ndim - 2))
+        y, h = ssd_chunked(padf(x), padf(dt), A, padf(Bm), padf(Cm), Q, h0)
+        return y[:, :S], h
+    nc = S // Q
+    rep = H // G
+
+    def chunkify(a):
+        return a.reshape((Bsz, nc, Q) + a.shape[2:])
+
+    xc, dtc = chunkify(x), chunkify(dt)
+    Bc, Cc = chunkify(Bm), chunkify(Cm)
+    dA = dtc * A.astype(jnp.float32)                       # [B,nc,Q,H]
+    dAh = dA.transpose(0, 1, 3, 2)                         # [B,nc,H,Q]
+    cum = jnp.cumsum(dAh, axis=-1)                         # [B,nc,H,Q]
+
+    # --- intra-chunk (quadratic) term ---
+    L = jnp.exp(_segsum(dAh))                              # [B,nc,H,Q,Q]
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    M = scores * L * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)            # [B,nc,H,Q]
+    wgt = (decay_to_end * dtc.transpose(0, 1, 3, 2)).transpose(0, 1, 3, 2)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Bh, wgt.astype(jnp.float32),
+                        xc.astype(jnp.float32))            # [B,nc,H,P,N]
+
+    # --- inter-chunk scan over states ---
+    chunk_decay = jnp.exp(cum[..., -1])                    # [B,nc,H]
+    init = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+
+    def scan_body(h, inp):
+        s_c, dec = inp                                     # [B,H,P,N],[B,H]
+        h_out = h                                          # state *entering*
+        h = h * dec[..., None, None] + s_c
+        return h, h_out
+
+    sc = states.swapaxes(0, 1)                             # [nc,B,H,P,N]
+    dc = chunk_decay.swapaxes(0, 1)                        # [nc,B,H]
+    h_final, h_in = jax.lax.scan(scan_body, init, (sc, dc))
+
+    # --- inter-chunk contribution: y += C_i · (decay_i * h_in) ---
+    in_decay = jnp.exp(cum).transpose(0, 1, 3, 2)          # [B,nc,Q,H]
+    h_in = h_in.swapaxes(0, 1)                             # [B,nc,H,P,N]
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch, h_in,
+                         preferred_element_type=jnp.float32)
+    y = y_intra + y_inter * in_decay[..., None]
+    return y.reshape(Bsz, S, H, Pd).astype(x.dtype), h_final
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0=None):
+    """Sequential recurrence oracle (tests): step-by-step state update."""
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    h = (jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        da = jnp.exp(dt[:, t] * A)                         # [B,H]
+        Bt = jnp.repeat(Bm[:, t], rep, axis=1)             # [B,H,N]
+        Ct = jnp.repeat(Cm[:, t], rep, axis=1)
+        upd = (dt[:, t, :, None, None] * x[:, t, :, :, None].astype(jnp.float32)
+               * Bt[:, :, None, :].astype(jnp.float32))
+        h = h * da[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bhn->bhp", h, Ct.astype(jnp.float32)))
+    return jnp.stack(ys, 1).astype(x.dtype), h
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                eps: float) -> jnp.ndarray:
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, -1, keepdims=True) + eps)
+    return (g * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, par: ParallelCfg,
+              *, mode: str = "train", state: dict | None = None):
+    """Mamba2 mixer. x [B,S,D]. mode train/prefill: full-seq chunked SSD
+    (returns (y, None)); decode: single step against ``state`` =
+    {"h": [B,H,P,N] f32, "conv": [B,K-1, di+2GN]} (returns (y, new_state))."""
+    Bsz, S, D = x.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    Pd, K = cfg.ssm_headdim, cfg.ssm_conv
+
+    z = jnp.einsum("bsd,de->bse", x, cast(p["wz"]))
+    xin = jnp.einsum("bsd,de->bse", x, cast(p["wx"]))
+    bc = jnp.einsum("bsd,de->bse", x, cast(p["wbc"]))
+    dt = jnp.einsum("bsd,dh->bsh", x, cast(p["wdt"]))
+    ispec = batch_spec(par, None, "model")
+    z, xin = constrain(z, par, ispec), constrain(xin, par, ispec)
+
+    new_state = None
+    if mode == "decode":
+        conv_st = state["conv"]                            # [B, K-1, C]
+        full = jnp.concatenate([conv_st, jnp.concatenate([xin, bc], -1)], 1)
+        w = jnp.concatenate([p["conv_x"], p["conv_bc"]], 1)
+        b = jnp.concatenate([p["conv_bias_x"], p["conv_bias_bc"]], 0)
+        conv_out = jnp.einsum("bkc,kc->bc", full, cast(w)) + cast(b)
+        conv_out = jax.nn.silu(conv_out)[:, None]          # [B,1,C]
+        xin, bc = conv_out[..., :di], conv_out[..., di:]
+        new_conv = full[:, 1:]
+    else:
+        if mode == "prefill":                      # pre-conv tail for decode
+            new_conv = jnp.concatenate([xin, bc], -1)[:, S - K + 1:]
+        xin = jax.nn.silu(_causal_conv(xin, p["conv_x"], p["conv_bias_x"]))
+        bc = jax.nn.silu(_causal_conv(bc, p["conv_bc"], p["conv_bias_bc"]))
+
+    Bm = bc[..., :G * N].reshape(Bsz, S, G, N)
+    Cm = bc[..., G * N:].reshape(Bsz, S, G, N)
+    xh = xin.reshape(Bsz, S, H, Pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        da = jnp.exp(dt[:, 0] * A)                         # [B,H]
+        rep = H // G
+        Bt = jnp.repeat(Bm[:, 0], rep, axis=1)
+        Ct = jnp.repeat(Cm[:, 0], rep, axis=1)
+        upd = (dt[:, 0, :, None, None]
+               * xh[:, 0, :, :, None].astype(jnp.float32)
+               * Bt[:, :, None, :].astype(jnp.float32))
+        h = state["h"] * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct.astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)                     # [B,1,H,P]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+        if mode == "prefill":
+            new_state = {"h": h_final, "conv": new_conv}
+
+    y = y + xh * cast(p["Dskip"])[:, None]
+    y = y.reshape(Bsz, S, di)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, cast(p["out"]))
+    return out, new_state

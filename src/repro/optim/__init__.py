@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_lr)
+from repro.optim.compress import (CompressState, compress_init,
+                                  compressed_grads)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "CompressState", "compress_init", "compressed_grads"]

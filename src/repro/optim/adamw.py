@@ -1,0 +1,88 @@
+"""AdamW with cosine schedule, global-norm clipping and sharded state.
+
+Functional: ``state = adamw_init(params)``; ``params, state =
+adamw_update(params, grads, state, cfg)``.  Moments inherit the parameter
+tree's sharding (ZeRO: with fsdp rules the params — and therefore m/v —
+shard over the data axes; the dry-run verifies the resulting memory).
+``moment_dtype=bfloat16`` halves optimizer HBM (a §Perf lever for the
+1T-param cell); master params stay fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)  # noqa: E731
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: OptState, cfg: AdamWConfig
+                 ) -> tuple[Any, OptState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_lr(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g * g
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        # Decoupled weight decay on matrices only (ndim >= 2).
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (u + wd * p32)
+        return (p32.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(new_m, new_v, step), metrics

@@ -1,0 +1,52 @@
+"""Int8 gradient compression with error feedback.
+
+At 1000+-node scale the cross-pod data-parallel all-reduce is the slowest
+collective (DCN, not ICI).  Compressing pod-boundary gradients to int8 with
+an error-feedback accumulator cuts those bytes 4x at negligible quality
+cost (the residual is re-injected next step, so the compression error is
+a delayed — not lost — signal).
+
+Mechanics: grads are quantized per-tensor (symmetric, max-abs scaling),
+dequantized immediately (this container cannot run a real DCN reduce), and
+the quantization residual is carried in ``CompressState``.  On hardware the
+int8 payload is what crosses the pod boundary; the roofline collective
+term for the multi-pod mesh is scaled accordingly (see launch/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any   # error-feedback accumulator, same tree as grads
+
+
+def compress_init(params) -> CompressState:
+    return CompressState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _q8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_grads(grads, state: CompressState
+                     ) -> tuple[Any, CompressState, dict]:
+    """Returns (dequantized grads, new state, metrics)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, scale = _q8(x)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), x - deq
+
+    out = jax.tree.map(one, grads, state.residual)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    res = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    err = sum(jnp.sum(jnp.square(r)) for r in jax.tree.leaves(res))
+    return deq, CompressState(res), {"compress_residual_sq": err}

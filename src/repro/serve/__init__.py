@@ -1,0 +1,3 @@
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+__all__ = ["Request", "ServeConfig", "ServeEngine"]

@@ -1,0 +1,152 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+A fixed pool of ``batch_slots`` decode lanes runs one jit'd decode step per
+tick over the whole pool (caches are [L, B, ...] arrays — the exact shapes
+the ``decode_*`` dry-run cells lower).  New requests are prefilled
+individually (a second jit'd program) and their caches inserted into a free
+lane; finished lanes (EOS or ``max_new``) are evicted and refilled —
+vLLM-style continuous batching reduced to its JAX-native core.
+
+Greedy and temperature sampling; per-request token logs; deterministic
+given the seed.  The engine is what ``examples/serve_lm.py`` and the
+offline-inference cluster workload drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.models.common import ArchConfig
+from repro.models.parallel import ParallelCfg
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new: int = 16
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 4
+    max_len: int = 256                 # KV-cache horizon per lane
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: int = -1                   # -1: never EOS (synthetic vocab)
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cfg: ArchConfig,
+                 par: ParallelCfg, sc: ServeConfig = ServeConfig()):
+        self.model, self.params, self.cfg, self.par, self.sc = \
+            model, params, cfg, par, sc
+        self._decode = jax.jit(
+            lambda p, b: model.decode(p, b, cfg, par))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg, par))
+        self._key = jax.random.key(sc.seed)
+        self.caches: dict[str, Any] | None = None
+        self.lane_req: list[Request | None] = [None] * sc.batch_slots
+        self.lane_pos = np.zeros(sc.batch_slots, np.int32)
+
+    # -- cache pool -----------------------------------------------------------
+    def _init_caches(self, template: dict) -> None:
+        """Allocate the lane pool from a single-request prefill's caches.
+
+        KV time dims are resized to the ``max_len`` horizon; SSM/conv/cross
+        caches keep their shapes."""
+        B, M = self.sc.batch_slots, self.sc.max_len
+        pool = {}
+        for k, v in template.items():
+            shape = (v.shape[0], B) + v.shape[2:]
+            if k in ("k_cache", "v_cache"):
+                W = min(v.shape[2], M) if self.cfg.attn_window else M
+                shape = (v.shape[0], B, W) + v.shape[3:]
+            pool[k] = jnp.zeros(shape, v.dtype)
+        self.caches = pool
+
+    def _insert(self, lane: int, caches_1: dict, prompt_len: int) -> None:
+        for k, v in caches_1.items():
+            pool = self.caches[k]
+            if k in ("k_cache", "v_cache"):
+                W = pool.shape[2]
+                if v.shape[2] >= W:
+                    src = v[:, :, :W]
+                else:
+                    src = jnp.pad(v, [(0, 0), (0, 0), (0, W - v.shape[2])]
+                                  + [(0, 0)] * (v.ndim - 3))
+            else:
+                src = v
+            self.caches[k] = pool.at[:, lane].set(src[:, 0])
+
+    # -- scheduling -----------------------------------------------------------
+    def _admit(self, queue: list[Request]) -> None:
+        for lane in range(self.sc.batch_slots):
+            if self.lane_req[lane] is not None or not queue:
+                continue
+            req = queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            if self.cfg.n_encoder_layers:
+                batch["frame_embeds"] = jnp.zeros(
+                    (1, len(req.prompt), self.cfg.d_model), jnp.bfloat16)
+            if self.cfg.frontend == "vision_stub":
+                P = min(self.cfg.n_frontend_tokens, 8)
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, P, self.cfg.d_model), jnp.bfloat16)
+            logits, caches_1 = self._prefill(self.params, batch)
+            if self.caches is None:
+                self._init_caches(caches_1)
+            self._insert(lane, caches_1, len(req.prompt))
+            tok = self._sample(logits)[0]
+            req.out_tokens.append(int(tok))
+            self.lane_req[lane] = req
+            self.lane_pos[lane] = len(req.prompt)
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        logits = logits[..., :self.cfg.vocab_size]
+        if self.sc.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self._key, k = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.sc.temperature))
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, requests: list[Request], max_ticks: int = 10_000
+            ) -> list[Request]:
+        queue = list(requests)
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            self._admit(queue)
+            active = [l for l, r in enumerate(self.lane_req) if r is not None]
+            if not active:
+                if not queue:
+                    break
+                continue
+            # Pool decode tick: every lane advances one token at its own
+            # position (decode_step supports per-lane pos vectors).
+            last = jnp.asarray(
+                [r.out_tokens[-1] if r else 0 for r in self.lane_req],
+                jnp.int32)[:, None]
+            batch = {"token": last, "pos": jnp.asarray(self.lane_pos),
+                     **self.caches}
+            logits, self.caches = self._decode(self.params, batch)
+            toks = self._sample(logits)
+            for lane in active:
+                req = self.lane_req[lane]
+                req.out_tokens.append(int(toks[lane]))
+                self.lane_pos[lane] += 1
+                n_new = len(req.out_tokens)
+                if (toks[lane] == self.sc.eos_id or n_new >= req.max_new
+                        or self.lane_pos[lane] >= self.sc.max_len - 1):
+                    req.done = True
+                    done.append(req)
+                    self.lane_req[lane] = None
+        return done + [r for r in self.lane_req if r is not None]

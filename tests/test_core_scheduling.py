@@ -1,0 +1,196 @@
+"""Core FJSP layer: instances, objectives, decoders, solvers.
+
+Property tests (hypothesis) pin the feasibility invariants of the SGS
+decoder and timing sweep; the exact oracle certifies optimality on tiny
+instances (replacing the paper's CP-SAT ground truth).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, synthesize
+from repro.core.carbon import constant, sample_window
+from repro.core.decoder import sgs, timing_sweep, upward_rank
+from repro.core.instance import DAG_SHAPES, Job, Instance
+from repro.core.objectives import (carbon, check_feasible_np, energy,
+                                   evaluate, makespan, utilization,
+                                   violations)
+from repro.core.solvers import solve_bilevel, solve_ga, solve_sa
+from repro.core.solvers.annealing import SAConfig
+from repro.core.solvers.common import decode_full
+from repro.core.solvers.exact import exact_carbon, exact_makespan
+from repro.core.solvers.genetic import GAConfig
+
+
+def _trace_cum(rng, horizon=600, region="AU-SA"):
+    tr = synthesize(region, days=10)
+    return jnp.asarray(sample_window(tr, rng, horizon).cumulative())
+
+
+# ---------------------------------------------------------------------------
+# Instances + packing.
+# ---------------------------------------------------------------------------
+
+def test_pack_shapes_and_padding(rng):
+    inst = generate_instance(rng, n_jobs=4, k_tasks=3, n_machines=5,
+                             heterogeneous=True)
+    p = pack(inst, pad_tasks=20)
+    assert p.T == 20 and p.M == 5
+    assert int(p.task_mask.sum()) == 12
+    assert bool(p.allowed[12:, 0].all())          # padding on machine 0
+    # topological indexing: predecessors have smaller index
+    pr = np.asarray(p.pred)
+    assert not np.triu(pr).any()
+
+
+def test_hetero_durations_scale(rng):
+    inst = generate_instance(rng, n_jobs=2, k_tasks=2, heterogeneous=True)
+    d = inst.durations_matrix()
+    # slowest machine (speed 1/3) takes ~3x the baseline machine (speed 1)
+    assert (d[:, 0] >= d[:, 2]).all() and (d[:, 4] <= d[:, 2]).all()
+
+
+# ---------------------------------------------------------------------------
+# Feasibility properties of the decoders (hypothesis).
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 5),
+       n=st.integers(2, 5), rule=st.sampled_from(
+           ["earliest_finish", "min_energy", "fixed"]))
+def test_sgs_always_feasible(seed, k, n, rule):
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, n_jobs=n, k_tasks=k, n_machines=3,
+                             heterogeneous=bool(seed % 2))
+    p = pack(inst)
+    prio = jnp.asarray(rng.normal(size=p.T), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, 3, p.T), jnp.int32)
+    dec = sgs(p, prio, assign, machine_rule=rule)
+    assert int(violations(p, dec.start, dec.assign)) == 0
+    assert not check_feasible_np(p, dec.start, dec.assign)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_timing_sweep_feasible_and_monotone(seed):
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, n_jobs=3, k_tasks=4, n_machines=3)
+    p = pack(inst)
+    cum = _trace_cum(rng)
+    dec = sgs(p, jnp.asarray(rng.normal(size=p.T), jnp.float32))
+    ms0 = makespan(p, dec.start, dec.assign)
+    c0 = carbon(p, dec.start, dec.assign, cum)
+    deadline = ms0 + 20
+    start2 = timing_sweep(p, dec.start, dec.assign, cum,
+                          jnp.int32(deadline), sweeps=2)
+    assert int(violations(p, start2, dec.assign)) == 0
+    assert int(makespan(p, start2, dec.assign)) <= int(deadline)
+    assert float(carbon(p, start2, dec.assign, cum)) <= float(c0) + 1e-3
+
+
+def test_upward_rank_tops_roots(rng):
+    inst = generate_instance(rng, n_jobs=1, k_tasks=4, shape="chain")
+    p = pack(inst)
+    r = np.asarray(upward_rank(p))
+    assert r[0] == r[:4].max()        # chain root has the longest path
+
+
+# ---------------------------------------------------------------------------
+# Objectives.
+# ---------------------------------------------------------------------------
+
+def test_objectives_hand_example():
+    # 2 tasks chained on 1 machine: dur 2 then 3, intensity constant 100.
+    job = Job(arrival=0, base_durations=(2, 3), edges=((0, 1),))
+    inst = Instance(jobs=(job,), powers_kw=(2.0,), speeds=(1.0,))
+    p = pack(inst)
+    cum = jnp.asarray(constant(100.0, 50).cumulative())
+    start = jnp.asarray([0, 2], jnp.int32)
+    assign = jnp.zeros(2, jnp.int32)
+    obj = evaluate(p, start, assign, cum)
+    assert int(obj.makespan) == 5
+    assert float(obj.energy) == pytest.approx(2.0 * 5 * 0.25)
+    assert float(obj.carbon) == pytest.approx(2.0 * 5 * 0.25 * 100.0)
+    assert float(utilization(p, start, assign)) == pytest.approx(1.0)
+
+
+def test_violations_detects_each_constraint():
+    job = Job(arrival=2, base_durations=(2, 2), edges=((0, 1),))
+    inst = Instance(jobs=(job,), powers_kw=(1.0, 1.0), speeds=(1.0, 1.0))
+    p = pack(inst)
+    ok = jnp.asarray([2, 4], jnp.int32), jnp.asarray([0, 1], jnp.int32)
+    assert int(violations(p, *ok)) == 0
+    # arrival violation
+    assert int(violations(p, jnp.asarray([0, 4], jnp.int32), ok[1])) > 0
+    # dependency violation
+    assert int(violations(p, jnp.asarray([2, 3], jnp.int32), ok[1])) > 0
+    # overlap violation (same machine, same time)
+    assert int(violations(p, jnp.asarray([2, 2], jnp.int32),
+                          jnp.asarray([0, 0], jnp.int32))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Solvers vs. the exact oracle (the CP-SAT stand-in).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", ["sa", "ga"])
+def test_solver_reaches_exact_makespan(solver, rng):
+    inst = generate_instance(np.random.default_rng(7), n_jobs=2, k_tasks=2,
+                             n_machines=2, heterogeneous=True,
+                             arrival_horizon=1)
+    p = pack(inst)
+    opt = exact_makespan(p)
+    cum = _trace_cum(np.random.default_rng(7))
+    fn = solve_sa if solver == "sa" else solve_ga
+    cfgs = dict(sa=SAConfig(pop=64, iters=120), ga=GAConfig(pop=64, gens=80))
+    out = fn(p, cum, jnp.int32(1 << 27), jax.random.key(1),
+             objective="makespan", machine_rule="earliest_finish",
+             cfg=cfgs[solver])
+    res = decode_full(p, cum, jnp.int32(1 << 27), out.prio, out.assign,
+                      objective="makespan",
+                      machine_rule="earliest_finish", sweeps=0)
+    assert int(res.makespan) == opt
+
+
+def test_bilevel_matches_exact_carbon_on_tiny():
+    rng = np.random.default_rng(3)
+    job = Job(arrival=0, base_durations=(2, 2), edges=((0, 1),))
+    inst = Instance(jobs=(job,), powers_kw=(1.0, 1.0), speeds=(1.0, 1.0))
+    p = pack(inst)
+    tr = synthesize("AU-SA", days=2)
+    cum_np = sample_window(tr, rng, 16).cumulative()
+    cum = jnp.asarray(cum_np)
+    res = solve_bilevel(p, cum, jax.random.key(0), objective="carbon",
+                        stretch=2.0, cfg1=SAConfig(pop=64, iters=100),
+                        cfg2=SAConfig(pop=64, iters=100))
+    deadline = int(res.deadline)
+    c_exact, _, _ = exact_carbon(p, cum_np, deadline)
+    assert float(res.optimized.carbon) <= c_exact * 1.02 + 1e-6
+
+
+def test_bilevel_invariants(rng):
+    inst = generate_instance(np.random.default_rng(11), n_jobs=6, k_tasks=4,
+                             n_machines=5, heterogeneous=True)
+    p = pack(inst)
+    cum = _trace_cum(np.random.default_rng(11), horizon=800)
+    res = solve_bilevel(p, cum, jax.random.key(2), objective="carbon",
+                        stretch=1.5, cfg1=SAConfig(pop=48, iters=60),
+                        cfg2=SAConfig(pop=48, iters=60))
+    # savings never negative (warm start guard), deadline respected
+    assert float(res.carbon_savings) >= -1e-6
+    assert int(res.optimized.makespan) <= int(res.deadline)
+    assert not check_feasible_np(p, np.asarray(res.optimized.start),
+                                 np.asarray(res.optimized.assign))
+
+
+def test_constant_trace_carbon_equals_energy_times_intensity(rng):
+    inst = generate_instance(np.random.default_rng(5), n_jobs=3, k_tasks=3)
+    p = pack(inst)
+    cum = jnp.asarray(constant(250.0, 600).cumulative())
+    dec = sgs(p, upward_rank(p))
+    c = float(carbon(p, dec.start, dec.assign, cum))
+    e = float(energy(p, dec.assign))
+    assert c == pytest.approx(e * 250.0, rel=1e-5)

@@ -1,0 +1,84 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, synthesize
+from repro.core.carbon import sample_window
+from repro.core.objectives import task_durations
+from repro.kernels.ops import flash_attention, population_carbon, ssd_scan
+from repro.kernels.ref import attention_ref, schedule_carbon_ref, ssd_ref
+
+
+# ---------------------------------------------------------------------------
+# schedule_eval
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pop,pad,horizon", [(3, 10, 100), (17, 30, 500),
+                                             (64, 64, 257), (8, 130, 640)])
+def test_schedule_carbon_kernel(pop, pad, horizon):
+    rng = np.random.default_rng(pop)
+    inst = generate_instance(rng, n_jobs=4, k_tasks=2, n_machines=5,
+                             heterogeneous=True)
+    p = pack(inst, pad_tasks=pad)
+    tr = synthesize("CAL", days=10)
+    cum = jnp.asarray(sample_window(tr, rng, horizon).cumulative())
+    starts = jnp.asarray(rng.integers(0, horizon // 2, (pop, p.T)),
+                         jnp.int32)
+    assigns = jnp.asarray(rng.integers(0, 5, (pop, p.T)), jnp.int32)
+    out = population_carbon(p, starts, assigns, cum, interpret=True)
+    dur = jax.vmap(lambda a: task_durations(p, a))(assigns)
+    power = p.power[assigns] * p.task_mask[None, :]
+    ref = schedule_carbon_ref(starts, dur, power.astype(jnp.float32), cum)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KVH,S,dh,causal,window,dtype", [
+    (2, 4, 2, 128, 64, True, 0, jnp.float32),
+    (1, 8, 8, 256, 32, True, 64, jnp.float32),
+    (2, 2, 1, 128, 64, False, 0, jnp.float32),
+    (1, 4, 4, 128, 128, True, 0, jnp.bfloat16),
+    (1, 8, 2, 512, 64, True, 0, jnp.float32),
+])
+def test_flash_attention_kernel(B, H, KVH, S, dh, causal, window, dtype):
+    q = jax.random.normal(jax.random.key(1), (B, H, S, dh)).astype(dtype)
+    k = jax.random.normal(jax.random.key(2), (B, KVH, S, dh)).astype(dtype)
+    v = jax.random.normal(jax.random.key(3), (B, KVH, S, dh)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk,dtype", [
+    (2, 128, 4, 32, 2, 16, 32, jnp.float32),
+    (1, 64, 2, 16, 1, 8, 16, jnp.float32),
+    (1, 256, 8, 64, 1, 32, 64, jnp.float32),
+    (2, 64, 4, 32, 4, 16, 32, jnp.bfloat16),
+])
+def test_ssd_scan_kernel(B, S, H, P, G, N, chunk, dtype):
+    x = (0.5 * jax.random.normal(jax.random.key(4), (B, S, H, P))
+         ).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(5), (B, S, H)))
+    A = -jnp.exp(0.3 * jax.random.normal(jax.random.key(6), (H,)))
+    Bm = 0.5 * jax.random.normal(jax.random.key(7), (B, S, G, N))
+    Cm = 0.5 * jax.random.normal(jax.random.key(8), (B, S, G, N))
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    yr, hr = ssd_ref(x.astype(jnp.float32), dt, A, Bm, Cm)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                    atol=tol, rtol=tol)
+    assert_allclose(np.asarray(h), np.asarray(hr), atol=tol, rtol=tol)

@@ -1,0 +1,72 @@
+"""Online dispatchers (beyond-paper): feasibility + budget + savings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, synthesize
+from repro.core.carbon import constant, sample_window
+from repro.core.objectives import check_feasible_np, evaluate
+from repro.core.solvers.online import online_carbon_gated, online_greedy
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), hetero=st.booleans())
+def test_online_schedules_feasible(seed, hetero):
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, n_jobs=4, k_tasks=3, n_machines=3,
+                             heterogeneous=hetero)
+    p = pack(inst)
+    w = sample_window(synthesize("AU-SA", days=10), rng, 1500)
+    s0, a0 = online_greedy(p)
+    assert not check_feasible_np(p, s0, a0)
+    sg, ag = online_carbon_gated(p, w.intensity, stretch=1.5)
+    assert not check_feasible_np(p, sg, ag)
+
+
+def test_gate_respects_makespan_budget():
+    rng = np.random.default_rng(3)
+    inst = generate_instance(rng, n_jobs=6, k_tasks=4, n_machines=5)
+    p = pack(inst)
+    w = sample_window(synthesize("AU-SA", days=10), rng, 2000)
+    cum = jnp.asarray(w.cumulative())
+    s0, a0 = online_greedy(p)
+    ms0 = int(evaluate(p, jnp.asarray(s0), jnp.asarray(a0), cum).makespan)
+    for stretch in (1.25, 1.5, 2.0):
+        sg, ag = online_carbon_gated(p, w.intensity, theta=0.3,
+                                     stretch=stretch)
+        ms = int(evaluate(p, jnp.asarray(sg), jnp.asarray(ag), cum).makespan)
+        # critical-path gating bounds the makespan up to machine-contention
+        # tails (each task's chain fits the budget when released)
+        assert ms <= stretch * ms0 * 1.10 + 1
+
+
+def test_gate_saves_carbon_on_variable_trace():
+    rng = np.random.default_rng(5)
+    savings = []
+    for i in range(3):
+        inst = generate_instance(rng, n_jobs=6, k_tasks=4, n_machines=5)
+        p = pack(inst)
+        w = sample_window(synthesize("AU-SA", days=10), rng, 1500)
+        cum = jnp.asarray(w.cumulative())
+        s0, a0 = online_greedy(p)
+        sg, ag = online_carbon_gated(p, w.intensity, theta=0.4, stretch=1.5)
+        b = evaluate(p, jnp.asarray(s0), jnp.asarray(a0), cum)
+        g = evaluate(p, jnp.asarray(sg), jnp.asarray(ag), cum)
+        savings.append(1 - float(g.carbon) / float(b.carbon))
+    assert np.mean(savings) > 0.05
+
+
+def test_gate_noop_on_flat_trace():
+    """Constant intensity -> nothing is ever 'dirty' -> greedy behaviour."""
+    rng = np.random.default_rng(7)
+    inst = generate_instance(rng, n_jobs=4, k_tasks=3, n_machines=3)
+    p = pack(inst)
+    tr = constant(200.0, 2000)
+    s0, a0 = online_greedy(p)
+    sg, ag = online_carbon_gated(p, tr.intensity, theta=0.4, stretch=2.0)
+    cum = jnp.asarray(tr.cumulative())
+    c0 = float(evaluate(p, jnp.asarray(s0), jnp.asarray(a0), cum).carbon)
+    cg = float(evaluate(p, jnp.asarray(sg), jnp.asarray(ag), cum).carbon)
+    assert cg == pytest.approx(c0, rel=1e-6)

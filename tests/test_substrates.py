@@ -1,0 +1,203 @@
+"""Substrates: optimizer, data pipeline, checkpointing, trainer, serving."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS
+from repro.data import DataConfig, SyntheticPipeline
+from repro.models.api import build_model
+from repro.models.common import ShapeCfg
+from repro.models.params import init_params
+from repro.models.parallel import ParallelCfg
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compress_init, compressed_grads, cosine_lr)
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.train import TrainConfig, Trainer
+
+PAR = ParallelCfg(mesh=None, remat="none")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer.
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        params, state, m = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(cosine_lr(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(cosine_lr(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(cosine_lr(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(lr=1.0, warmup_steps=0, clip_norm=1.0)
+    state = adamw_init(params, cfg)
+    _, _, m = adamw_update(params, {"w": jnp.asarray([1e6, 0, 0])}, state,
+                           cfg)
+    assert float(m["grad_norm"]) == pytest.approx(1e6)
+
+
+def test_compress_error_feedback_preserves_signal():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=1000),
+                          jnp.float32)}
+    state = compress_init(g)
+    total_deq = jnp.zeros(1000)
+    for _ in range(8):
+        deq, state, _ = compressed_grads(g, state)
+        total_deq += deq["w"]
+    # error feedback: accumulated dequantized sum converges to 8*g
+    err = jnp.abs(total_deq - 8 * g["w"]).max()
+    assert float(err) < 0.05 * float(jnp.abs(g["w"]).max())
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+
+def test_pipeline_determinism_and_restart():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    shape = ShapeCfg("t", "train", 32, 4)
+    p1 = SyntheticPipeline(cfg, shape)
+    batches = [p1.next_batch() for _ in range(3)]
+    p2 = SyntheticPipeline(cfg, shape)
+    p2.load_state_dict({"step": 2})
+    b2 = p2.next_batch()
+    assert_allclose(np.asarray(b2["tokens"]), np.asarray(batches[2]["tokens"]))
+    # labels are next-token shifted
+    t = np.asarray(batches[0]["tokens"])
+    l = np.asarray(batches[0]["labels"])
+    assert (l[:, :-1] == t[:, 1:]).all() and (l[:, -1] == -1).all()
+
+
+def test_pipeline_emits_frontend_stubs():
+    cfg = ARCHS["llava-next-34b"].reduced()
+    b = SyntheticPipeline(cfg, ShapeCfg("t", "train", 64, 2)).next_batch()
+    assert "patch_embeds" in b and b["patch_embeds"].dtype == jnp.bfloat16
+    cfg = ARCHS["whisper-base"].reduced()
+    b = SyntheticPipeline(cfg, ShapeCfg("t", "train", 64, 2)).next_batch()
+    assert "frame_embeds" in b
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))},
+            "step": jnp.int32(7)}
+    for s in (1, 2, 3):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [2, 3]                  # keep-k GC
+    out = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert_allclose(np.asarray(out["a"]), np.arange(5))
+    assert int(out["step"]) == 7
+
+
+def test_checkpoint_ignores_incomplete_tmp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, {"x": jnp.ones(3)}, blocking=True)
+    os.makedirs(tmp_path / "step_00000009.tmp")      # simulated crash
+    assert mgr.latest() == 5
+
+
+# ---------------------------------------------------------------------------
+# Trainer: convergence, microbatch equivalence, preemption recovery.
+# ---------------------------------------------------------------------------
+
+def _mini_trainer(tmp, steps=6, micro=1, fault_hook=None):
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    m = build_model(cfg)
+    tc = TrainConfig(steps=steps, microbatches=micro, ckpt_every=2,
+                     log_every=1,
+                     opt=AdamWConfig(lr=1e-3, warmup_steps=1,
+                                     total_steps=steps))
+    return Trainer(m, cfg, PAR, tc, shape=ShapeCfg("t", "train", 64, 4),
+                   ckpt_dir=tmp, fault_hook=fault_hook), cfg
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr, _ = _mini_trainer(str(tmp_path), steps=10)
+    tr.resume()
+    hist = tr.run()
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_microbatch_equivalence(tmp_path):
+    h = []
+    for micro in (1, 2):
+        tr, _ = _mini_trainer(None, steps=3, micro=micro)
+        tr.init(seed=0)
+        h.append(tr.run())
+    assert h[0][-1]["loss"] == pytest.approx(h[1][-1]["loss"], rel=2e-3)
+
+
+def test_preemption_recovery(tmp_path):
+    """Crash at step 4; a fresh Trainer resumes from the checkpoint and the
+    final loss matches an uninterrupted run."""
+    class Crash(Exception):
+        pass
+
+    def bomb(step):
+        if step == 4:
+            raise Crash()
+
+    tr, _ = _mini_trainer(str(tmp_path), steps=6, fault_hook=bomb)
+    tr.resume()
+    with pytest.raises(Crash):
+        tr.run()
+    tr2, _ = _mini_trainer(str(tmp_path), steps=6)
+    start = tr2.resume()
+    # the step-4 save is async: depending on whether it completed before
+    # the crash, we resume from 4 or fall back to the step-2 checkpoint —
+    # both are correct "latest complete" semantics.
+    assert start in (2, 4)
+    hist = tr2.run()
+
+    tr3, _ = _mini_trainer(None, steps=6)
+    tr3.init(seed=0)
+    ref = tr3.run()
+    assert hist[-1]["loss"] == pytest.approx(ref[-1]["loss"], rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+def test_serve_continuous_batching_matches_single_lane():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    m = build_model(cfg)
+    params = init_params(jax.random.key(0), m.defs)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+
+    def serve(slots):
+        eng = ServeEngine(m, params, cfg, PAR,
+                          ServeConfig(batch_slots=slots, max_len=32))
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=4)
+                for i, p in enumerate(prompts)]
+        return {r.rid: r.out_tokens for r in eng.run(reqs)}
+
+    batched = serve(slots=3)
+    single = serve(slots=1)
+    assert batched == single
