@@ -16,6 +16,7 @@ on this 1-core container (defaults keep the full ``benchmarks.run`` under
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 
@@ -105,6 +106,15 @@ def summarize(r: dict) -> dict:
         "mean_utilization_pct": 100 * float(r["utilization"].mean()),
         "seconds": round(r["seconds"], 1),
     }
+
+
+def write_json(path: str, record: dict) -> str:
+    """Write a benchmark record as pretty JSON (e.g. BENCH_online.json)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def write_csv(name: str, rows: list[dict]) -> str:

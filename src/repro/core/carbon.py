@@ -24,6 +24,7 @@ so the emissions of a task on machine m starting at epoch s for d epochs are
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -89,7 +90,9 @@ class CarbonTrace:
 def synthesize(region: str = "AU-SA", days: int = 366, seed: int = 2024) -> CarbonTrace:
     """Generate a deterministic year-long synthetic trace for ``region``."""
     prof = REGIONS[region]
-    rng = np.random.default_rng((seed, hash(region) & 0xFFFF))
+    # crc32, not hash(): str hashing is randomized per process, which would
+    # make the "deterministic" generator emit a different trace every run.
+    rng = np.random.default_rng((seed, zlib.crc32(region.encode()) & 0xFFFF))
     hours = days * 24
     t = np.arange(hours, dtype=np.float64)
     hod = t % 24.0

@@ -10,9 +10,11 @@ pass).  Both are shape-static and vmap over populations and batched
 instances — that data-parallel search is the TPU-native replacement for the
 paper's sequential CP solver (DESIGN.md §3).
 
-Feasibility invariants (tested property-style): every decoded schedule
-respects arrivals (Eq. 4), DAG precedence (Eq. 5), machine validity (Eq. 6)
-and per-machine no-overlap (Eq. 8) — by construction.
+Feasibility invariants (property-tested against the shared validator,
+:mod:`repro.core.validate`): every decoded schedule respects arrivals
+(Eq. 4), DAG precedence (Eq. 5), machine validity (Eq. 6) and per-machine
+no-overlap (Eq. 8) — by construction; :func:`timing_sweep` additionally
+never exceeds its deadline and never increases carbon.
 """
 from __future__ import annotations
 

@@ -4,26 +4,27 @@ All evaluators take a schedule as ``(start[T], assign[T])`` integer arrays
 plus the :class:`~repro.core.instance.PackedInstance` and (for carbon) the
 cumulative carbon trace.  Everything is jnp and shape-static so it vmaps over
 candidate populations and batched instances.
+
+Feasibility checking lives in :mod:`repro.core.validate` (the shared
+validator); ``violations`` / ``check_feasible_np`` are re-exported here for
+backward compatibility.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.instance import EPOCH_HOURS, PackedInstance
+from repro.core.validate import (check_feasible_np,  # noqa: F401  (re-export)
+                                 task_durations,
+                                 total_violations as violations)
 
 
 class Objectives(NamedTuple):
     makespan: jnp.ndarray   # int32 scalar (epochs)
     energy: jnp.ndarray     # float32 scalar (kWh)
     carbon: jnp.ndarray     # float32 scalar (gCO2)
-
-
-def task_durations(inst: PackedInstance, assign: jnp.ndarray) -> jnp.ndarray:
-    """dur[t, assign[t]] -> int32 [T]."""
-    return jnp.take_along_axis(inst.dur, assign[:, None], axis=1)[:, 0]
 
 
 def makespan(inst: PackedInstance, start: jnp.ndarray,
@@ -72,70 +73,6 @@ def utilization(inst: PackedInstance, start: jnp.ndarray,
     return busy / (inst.M * jnp.maximum(ms, 1.0))
 
 
-# ---------------------------------------------------------------------------
-# Feasibility (Appendix A constraints, Eqs. 4-8).
-# ---------------------------------------------------------------------------
-
-def violations(inst: PackedInstance, start: jnp.ndarray,
-               assign: jnp.ndarray) -> jnp.ndarray:
-    """Total constraint-violation epochs (0 == feasible). jit/vmap friendly.
-
-    Checks: arrivals (Eq. 4), DAG precedence (Eq. 5), machine validity
-    (Eq. 6), no-overlap per machine (Eq. 8).
-    """
-    T = inst.T
-    d = task_durations(inst, assign)
-    comp = start + d
-    mask = inst.task_mask
-
-    # Eq. 4: start >= arrival.
-    v_arr = jnp.sum(jnp.where(mask, jnp.maximum(inst.arrival - start, 0), 0))
-
-    # Eq. 5: for every edge (u -> t): start[t] >= comp[u].
-    gap = comp[None, :] - start[:, None]          # [t, u]: must be <= 0 on edges
-    v_dep = jnp.sum(jnp.where(inst.pred & mask[:, None] & mask[None, :],
-                              jnp.maximum(gap, 0), 0))
-
-    # Eq. 6: assigned machine must be allowed.
-    ok = jnp.take_along_axis(inst.allowed, assign[:, None], axis=1)[:, 0]
-    v_mach = jnp.sum(jnp.where(mask & ~ok, 1, 0)) * jnp.int32(10**6)
-
-    # Eq. 8: no-overlap — for every pair on the same machine, intervals must
-    # be disjoint. Overlap(a,b) = max(0, min(end) - max(start)).
-    same_m = (assign[:, None] == assign[None, :])
-    both = mask[:, None] & mask[None, :]
-    iu = ~jnp.tri(T, dtype=bool)  # strictly upper: each unordered pair once
-    ov = jnp.minimum(comp[:, None], comp[None, :]) - \
-        jnp.maximum(start[:, None], start[None, :])
-    v_olap = jnp.sum(jnp.where(same_m & both & iu, jnp.maximum(ov, 0), 0))
-
-    return (v_arr + v_dep + v_mach + v_olap).astype(jnp.int32)
-
-
-def check_feasible_np(inst: PackedInstance, start, assign) -> list[str]:
-    """Python-level feasibility report (for tests / the exact oracle)."""
-    start = np.asarray(start)
-    assign = np.asarray(assign)
-    dur = np.asarray(inst.dur)
-    mask = np.asarray(inst.task_mask)
-    pred = np.asarray(inst.pred)
-    arr = np.asarray(inst.arrival)
-    allowed = np.asarray(inst.allowed)
-    probs = []
-    T = dur.shape[0]
-    comp = start + dur[np.arange(T), assign]
-    for t in range(T):
-        if not mask[t]:
-            continue
-        if not allowed[t, assign[t]]:
-            probs.append(f"task {t}: machine {assign[t]} not allowed")
-        if start[t] < arr[t]:
-            probs.append(f"task {t}: starts {start[t]} before arrival {arr[t]}")
-        for u in range(T):
-            if pred[t, u] and mask[u] and start[t] < comp[u]:
-                probs.append(f"task {t}: starts {start[t]} before pred {u} ends {comp[u]}")
-        for u in range(t + 1, T):
-            if mask[u] and assign[u] == assign[t]:
-                if max(start[t], start[u]) < min(comp[t], comp[u]):
-                    probs.append(f"tasks {t},{u} overlap on machine {assign[t]}")
-    return probs
+# Feasibility (Appendix A constraints, Eqs. 4-8) lives in repro.core.validate
+# — the single shared validator; `violations` / `check_feasible_np` /
+# `task_durations` are re-exported above for the historical import path.

@@ -101,18 +101,21 @@ def online_greedy(inst: PackedInstance) -> tuple[np.ndarray, np.ndarray]:
 
 def online_carbon_gated(inst: PackedInstance, intensity: np.ndarray,
                         theta: float = 0.5, window: int = 96,
-                        stretch: float = 1.5
+                        stretch: float = 1.5, budget: int | None = None
                         ) -> tuple[np.ndarray, np.ndarray]:
     """Carbon-gated dispatch under an online makespan budget.
 
     ``intensity``: per-epoch gCO2/kWh forecast (the cum-trace's diffs).
     Budget = ``stretch x`` the greedy online makespan (computed first) —
-    the online analogue of the paper's S-constraint.
+    the online analogue of the paper's S-constraint.  Pass ``budget``
+    directly (``int(stretch * greedy_makespan)``) to skip the internal
+    greedy run, e.g. when sweeping many policies over one instance.
     """
-    s0, a0 = online_greedy(inst)
-    dur = np.asarray(inst.dur)
-    mask = np.asarray(inst.task_mask)
-    T = dur.shape[0]
-    ms0 = int(max((s0[t] + dur[t, a0[t]]) for t in range(T) if mask[t]))
-    budget = int(stretch * ms0)
+    if budget is None:
+        s0, a0 = online_greedy(inst)
+        dur = np.asarray(inst.dur)
+        mask = np.asarray(inst.task_mask)
+        T = dur.shape[0]
+        ms0 = int(max((s0[t] + dur[t, a0[t]]) for t in range(T) if mask[t]))
+        budget = int(stretch * ms0)
     return _simulate(inst, np.asarray(intensity), theta, window, budget)

@@ -1,0 +1,312 @@
+"""Batched online dispatch as one shape-static XLA program.
+
+The paper's §4 poses *online* carbon-aware scheduling as future work: jobs
+are seen only at arrival (Eq. 4's release dates become information
+constraints), yet schedules must still satisfy the Appendix A feasibility
+system — precedence (Eq. 5), machine validity (Eq. 6) and no-overlap
+(Eq. 8) — while a stretch budget caps makespan the way the bi-level
+``S x OPT`` deadline does offline.  :mod:`repro.core.solvers.online` answers
+that question with a sequential numpy event loop: the *reference oracle*,
+one instance at a time.
+
+This module is the same dispatch semantics as an epoch-driven
+``lax.scan``: one scan step per epoch updates (ready set, machine free
+times, carbon gate) for *all* tasks at once, so the whole simulation — and
+therefore a full sweep of batched instances x gate policies — runs as a
+single compiled program with no host round-trips.  It ``vmap``s along two
+axes:
+
+* **instances** — stacked :class:`~repro.core.instance.PackedInstance`
+  batches from :func:`~repro.core.instance.stack_packed`, each with its own
+  carbon-intensity forecast window;
+* **policies** — a flat grid of gate knobs ``(theta, window, stretch)``
+  (see :func:`policy_grid`), the online analogue of the paper's S-sweep.
+
+Exact-match construction (property-tested against the numpy oracle):
+
+* the downstream-critical-path gate is a reverse ``fori_loop`` over the
+  topological task order, mirroring ``upward_rank`` in
+  :mod:`repro.core.decoder`;
+* the ``theta``-quantile gate threshold is precomputed for every epoch with
+  a masked sort + the same linear interpolation ``np.quantile`` uses
+  (including the truncated window at the end of the forecast);
+* within an epoch, tasks are dispatched in topological index order by an
+  inner ``scan`` — scheduling a task can only *remove* options inside the
+  same epoch (machines become busy, never free; predecessors finish at
+  ``t + dur > t``), so a single ordered pass reproduces the oracle's
+  fixpoint loop.
+
+Caveats for bit-exact parity with the numpy loop: the greedy baseline must
+complete within ``n_epochs - 1`` epochs (check ``OnlineSchedule.scheduled``)
+and ``stretch`` should be a binary-exact float (1.25, 1.5, 2.0, ...) so
+``int(stretch * makespan)`` truncates identically in float32.
+
+Feasibility of every emitted schedule is checked by the shared validator,
+:mod:`repro.core.validate` (Eqs. 4-8 + stretch budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.objectives import makespan
+
+BIG = jnp.int32(1 << 20)
+
+
+class OnlineSchedule(NamedTuple):
+    start: jnp.ndarray      # int32 [T]
+    assign: jnp.ndarray     # int32 [T]
+    scheduled: jnp.ndarray  # bool  [T] — dispatched within the horizon
+
+
+class SweepResult(NamedTuple):
+    """Output of :func:`sweep_policies` (leading axes: B instances, P policies)."""
+
+    greedy: OnlineSchedule         # [B, ...] carbon-agnostic baseline
+    gated: OnlineSchedule          # [B, P, ...] one per policy
+    greedy_makespan: jnp.ndarray   # int32 [B]
+    budget: jnp.ndarray            # int32 [B, P] = int(stretch * greedy_makespan)
+
+
+@jax.jit
+def downstream_critical_path(inst: PackedInstance) -> jnp.ndarray:
+    """Min-duration downstream critical path per task, incl. itself.
+
+    The carbon gate lets a ready task wait only while ``t + 1 + cp[t]`` still
+    fits the stretch budget, so waiting can never make the budget
+    unreachable.  Tasks are topologically indexed, so a reverse ``fori_loop``
+    suffices (mirrors ``upward_rank`` in :mod:`repro.core.decoder`).
+    """
+    T = inst.T
+    dmin = jnp.min(jnp.where(inst.allowed, inst.dur, BIG), axis=1)
+    succ = inst.pred.T & inst.task_mask[None, :]   # succ[t, v]: t -> v edge
+
+    def body(i, cp):
+        t = T - 1 - i
+        best = jnp.max(jnp.where(succ[t], cp, 0))
+        return cp.at[t].set(jnp.where(inst.task_mask[t], dmin[t] + best, 0))
+
+    return jax.lax.fori_loop(0, T, body, jnp.zeros((T,), jnp.int32))
+
+
+def _sorted_windows(intensity: jnp.ndarray, window: jnp.ndarray,
+                    max_window: int):
+    """Per-epoch forecast windows, sorted — the expensive half of the gate.
+
+    Invalid slots (past ``window`` or past the forecast end) become ``+inf``
+    and sort to the back; the valid count ``n[t]`` tells the quantile how far
+    to interpolate.  Depends on ``window`` but *not* ``theta``, so sweeps
+    sort once per (instance, window) and reuse across thetas and stretches.
+    """
+    E = intensity.shape[0]
+    off = jnp.arange(max_window)
+    idx = jnp.arange(E)[:, None] + off[None, :]               # [E, W]
+    valid = (off[None, :] < window) & (idx < E)
+    vals = jnp.where(valid, intensity[jnp.clip(idx, 0, E - 1)], jnp.inf)
+    return jnp.sort(vals, axis=1), valid.sum(1)
+
+
+def _quantile_dirty(intensity: jnp.ndarray, sv: jnp.ndarray, n: jnp.ndarray,
+                    theta: jnp.ndarray) -> jnp.ndarray:
+    """Interpolated ``theta``-quantile over the sorted windows -> dirty mask."""
+    vi = theta.astype(jnp.float32) * (n - 1).astype(jnp.float32)
+    lo = jnp.floor(vi)
+    gamma = vi - lo
+    lo_i = lo.astype(jnp.int32)
+    hi_i = jnp.minimum(lo_i + 1, n - 1)
+    a = jnp.take_along_axis(sv, lo_i[:, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(sv, hi_i[:, None], axis=1)[:, 0]
+    diff = b - a
+    # np.quantile's _lerp switches formula at gamma >= 0.5 for accuracy.
+    thresh = jnp.where(gamma >= 0.5, b - diff * (1.0 - gamma),
+                       a + diff * gamma)
+    return intensity > thresh + 1e-9
+
+
+@functools.partial(jax.jit, static_argnames=("max_window",))
+def dirty_mask(intensity: jnp.ndarray, theta: jnp.ndarray,
+               window: jnp.ndarray, max_window: int) -> jnp.ndarray:
+    """``dirty[t] = intensity[t] > quantile(intensity[t:t+window], theta)``.
+
+    Replicates ``np.quantile``'s linear interpolation — including the
+    truncated window near the end of the forecast — via a masked sort.
+    ``theta`` and ``window`` are traced, so a policy grid vmaps over them;
+    only ``max_window`` (the sort width) is static.
+    """
+    sv, n = _sorted_windows(intensity, window, max_window)
+    return _quantile_dirty(intensity, sv, n, theta)
+
+
+@functools.partial(jax.jit, static_argnames=("n_epochs",))
+def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
+                    budget: jnp.ndarray, n_epochs: int) -> OnlineSchedule:
+    """Run the event-driven dispatcher for epochs ``0 .. n_epochs - 2``.
+
+    ``dirty[t]`` gates ready tasks at epoch ``t`` (all-False == greedy);
+    ``budget`` is the stretch cap on ``t + 1 + critical_path`` while waiting.
+    Semantics match ``online._simulate`` exactly: a task is dispatched at the
+    first epoch where it has arrived, its predecessors have completed, the
+    gate is open (or waiting would break the budget) and an allowed machine
+    is free — on the free machine minimizing ``(duration, power * duration,
+    index)`` lexicographically.
+    """
+    T, M = inst.T, inst.M
+    cp = downstream_critical_path(inst)
+    preds = inst.pred & inst.task_mask[None, :]
+
+    # At most M tasks can be placed per epoch (each placement occupies one
+    # machine; machines never free mid-epoch since durations are >= 1), and
+    # placements only *shrink* later tasks' options — so M rounds of "place
+    # the lowest-indexed eligible task" reproduce the oracle's index-order
+    # pass with M instead of T sequential steps.
+    def epoch_body(t, state):
+        dirty_t = dirty[t]
+        scheduled, comp, mfree, start, assign = state
+        # Epoch-invariant parts of eligibility: a predecessor placed *this*
+        # epoch completes at t + dur > t, so it blocks successors exactly
+        # like an unscheduled one — blocked needn't be recomputed per round.
+        blocked = jnp.any(preds & (~scheduled | (comp > t))[None, :], axis=1)
+        waiting = dirty_t & (t + 1 + cp <= budget)
+        base = (inst.task_mask & (inst.arrival <= t) & ~blocked & ~waiting)
+
+        def round_body(_, carry):
+            scheduled, comp, mfree, start, assign = carry
+            free = inst.allowed & (mfree <= t)[None, :]            # [T, M]
+            elig = base & ~scheduled & jnp.any(free, axis=1)
+            tk = jnp.argmax(elig).astype(jnp.int32)  # lowest eligible index
+            place = elig[tk]
+            durs = inst.dur[tk]
+            dmin = jnp.min(jnp.where(free[tk], durs, BIG))
+            cand = free[tk] & (durs == dmin)
+            cost = inst.power * durs.astype(jnp.float32)
+            m = jnp.argmin(jnp.where(cand, cost, jnp.inf)).astype(jnp.int32)
+            c = t + durs[m]
+            return (scheduled.at[tk].set(scheduled[tk] | place),
+                    comp.at[tk].set(jnp.where(place, c, comp[tk])),
+                    mfree.at[m].set(jnp.where(place, c, mfree[m])),
+                    start.at[tk].set(jnp.where(place, t, start[tk])),
+                    assign.at[tk].set(jnp.where(place, m, assign[tk])))
+
+        return jax.lax.fori_loop(0, M, round_body,
+                                 (scheduled, comp, mfree, start, assign))
+
+    # Epochs past the last placement are no-ops in the oracle, so a
+    # while_loop that exits once every real task is scheduled (vmap masks
+    # finished lanes) visits the same epochs 0 .. n_epochs - 2 semantics-wise
+    # while skipping the dead tail — the hot-path win for batched sweeps.
+    def cond(carry):
+        t, (scheduled, *_rest) = carry
+        return (t < n_epochs - 1) & ~jnp.all(scheduled | ~inst.task_mask)
+
+    def body(carry):
+        t, state = carry
+        return t + 1, epoch_body(t, state)
+
+    init = (jnp.zeros((T,), bool), jnp.zeros((T,), jnp.int32),
+            jnp.zeros((M,), jnp.int32), jnp.zeros((T,), jnp.int32),
+            jnp.zeros((T,), jnp.int32))
+    _, (scheduled, _, _, start, assign) = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), init))
+    return OnlineSchedule(start, assign, scheduled)
+
+
+def online_greedy_jax(inst: PackedInstance, n_epochs: int) -> OnlineSchedule:
+    """Carbon-agnostic baseline (gate always open) over a static horizon."""
+    return simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
+                           n_epochs=n_epochs)
+
+
+def online_carbon_gated_jax(inst: PackedInstance, intensity,
+                            theta: float = 0.5, window: int = 96,
+                            stretch: float = 1.5) -> OnlineSchedule:
+    """Single-instance gated dispatch (mirrors ``online_carbon_gated``).
+
+    Runs the greedy baseline first to set ``budget = int(stretch * makespan)``,
+    then the gated simulation over the forecast horizon.
+    """
+    intensity = jnp.asarray(intensity)
+    n_epochs = int(intensity.shape[0])
+    g = online_greedy_jax(inst, n_epochs)
+    ms0 = makespan(inst, g.start, g.assign)
+    budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
+    dirty = dirty_mask(intensity, jnp.float32(theta), jnp.int32(window),
+                       max_window=int(window))
+    return simulate_online(inst, dirty, budget, n_epochs=n_epochs)
+
+
+def policy_grid(thetas: Sequence[float], windows: Sequence[int],
+                stretches: Sequence[float]):
+    """Outer product of gate knobs, flattened to three aligned [P] arrays."""
+    th, wi, sx = np.meshgrid(np.asarray(thetas, np.float32),
+                             np.asarray(windows, np.int32),
+                             np.asarray(stretches, np.float32),
+                             indexing="ij")
+    return (jnp.asarray(th.ravel()), jnp.asarray(wi.ravel()),
+            jnp.asarray(sx.ravel()))
+
+
+@functools.partial(jax.jit, static_argnames=("n_epochs", "max_window"))
+def _sweep(batch: PackedInstance, intensity: jnp.ndarray,
+           thetas: jnp.ndarray, windows: jnp.ndarray, stretches: jnp.ndarray,
+           n_epochs: int, max_window: int) -> SweepResult:
+    def per_instance(inst, inten):
+        g = simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
+                            n_epochs=n_epochs)
+        ms0 = makespan(inst, g.start, g.assign)
+
+        # window is the expensive axis (the masked sort); keep it outermost
+        # so thetas and stretches reuse each sort.
+        def per_window(wi):
+            sv, n = _sorted_windows(inten, wi, max_window)
+
+            def per_theta(th):
+                dirty = _quantile_dirty(inten, sv, n, th)
+
+                def per_stretch(sx):
+                    budget = (sx * ms0.astype(jnp.float32)).astype(jnp.int32)
+                    return simulate_online(inst, dirty, budget,
+                                           n_epochs=n_epochs), budget
+
+                return jax.vmap(per_stretch)(stretches)
+
+            return jax.vmap(per_theta)(thetas)
+
+        gated, budgets = jax.vmap(per_window)(windows)   # axes [W, Th, S, ...]
+
+        def flat(x):  # -> theta-major [P, ...], matching policy_grid order
+            x = jnp.moveaxis(x, 1, 0)                    # [Th, W, S, ...]
+            return x.reshape((-1,) + x.shape[3:])
+
+        return g, jax.tree.map(flat, gated), ms0, flat(budgets)
+
+    g, gated, ms0, budgets = jax.vmap(per_instance)(batch, intensity)
+    return SweepResult(g, gated, ms0, budgets)
+
+
+def sweep_policies(batch: PackedInstance, intensity, thetas, windows,
+                   stretches) -> SweepResult:
+    """Batched instances x policy grid, one XLA program.
+
+    ``batch``: stacked instances [B, ...]; ``intensity``: per-instance
+    forecast [B, E]; ``thetas``/``windows``/``stretches``: the three *axes*
+    of the gate-policy grid.  Gated results carry a flattened policy axis of
+    size ``P = len(thetas) * len(windows) * len(stretches)`` in the same
+    theta-major order :func:`policy_grid` enumerates, so
+    ``policy_grid(thetas, windows, stretches)`` labels the P rows.  The
+    greedy baseline runs once per instance and every gated run reuses its
+    makespan for the budget; window-sorts are shared across thetas/stretches.
+    """
+    intensity = jnp.asarray(intensity)
+    windows = np.asarray(windows, np.int32)
+    return _sweep(batch, intensity,
+                  jnp.asarray(thetas, jnp.float32), jnp.asarray(windows),
+                  jnp.asarray(stretches, jnp.float32),
+                  n_epochs=int(intensity.shape[-1]),
+                  max_window=int(windows.max()))

@@ -1,0 +1,165 @@
+"""Shared schedule-feasibility validator — one source of truth for Eqs. 4-8.
+
+Every layer that produces or consumes a schedule ``(start[T], assign[T])``
+checks it here, against the constraints of the paper's Appendix A MILP:
+
+  Eq. 4  arrivals          start[t] >= a_{j(t)}
+  Eq. 5  DAG precedence    start[v] >= start[u] + p_{u,assign[u]} on edges u->v
+  Eq. 6  machine validity  assign[t] in allowed[t]
+  Eq. 8  no-overlap        intervals on one machine are pairwise disjoint
+  budget (deadline)        completion[t] <= deadline — the ``S x OPT`` cap of
+                           the bi-level protocol (Section 3.1) and the online
+                           stretch budget of the dispatchers.
+
+(Eq. 7 — each task runs on exactly one machine — holds structurally: the
+``assign`` representation cannot express anything else.)
+
+Two paths over the same semantics:
+
+* :func:`violation_report` / :func:`total_violations` — jnp, jit- and
+  vmap-friendly, return integer violation *masses* (0 == feasible).  Used by
+  solvers, decoders and batched benchmarks without host round-trips.
+* :func:`check_feasible_np` / :func:`assert_feasible_np` — numpy/Python,
+  return human-readable problem strings.  Used by tests and the oracles.
+
+Padded tasks (``task_mask == False``) are ignored by every check.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.instance import PackedInstance
+
+_MACHINE_WEIGHT = jnp.int32(10**6)  # one disallowed assignment >> any epoch mass
+
+
+class ViolationReport(NamedTuple):
+    """Per-constraint violation masses (int32 scalars; all-zero == feasible)."""
+
+    arrival: jnp.ndarray     # Eq. 4: epochs started before arrival
+    precedence: jnp.ndarray  # Eq. 5: epochs a task overlaps a predecessor
+    machine: jnp.ndarray     # Eq. 6: count of disallowed assignments
+    overlap: jnp.ndarray     # Eq. 8: overlap epochs on shared machines
+    budget: jnp.ndarray      # deadline: epochs of completion past it
+
+    @property
+    def total(self) -> jnp.ndarray:
+        return (self.arrival + self.precedence + self.machine
+                + self.overlap + self.budget)
+
+    @property
+    def feasible(self) -> jnp.ndarray:
+        return self.total == 0
+
+
+def task_durations(inst: PackedInstance, assign: jnp.ndarray) -> jnp.ndarray:
+    """dur[t, assign[t]] -> int32 [T].  Owned here (the lowest layer above
+    ``instance``); ``objectives`` re-exports it for the historical path."""
+    return jnp.take_along_axis(inst.dur, assign[:, None], axis=1)[:, 0]
+
+
+def violation_report(inst: PackedInstance, start: jnp.ndarray,
+                     assign: jnp.ndarray,
+                     deadline: jnp.ndarray | None = None) -> ViolationReport:
+    """Per-constraint violation masses; jit/vmap friendly.
+
+    ``deadline`` (optional, epochs): when given, completions past it count as
+    budget violations — pass the bi-level ``S x OPT`` deadline or the online
+    stretch budget.
+    """
+    T = inst.T
+    d = task_durations(inst, assign)
+    comp = start + d
+    mask = inst.task_mask
+
+    # Eq. 4: start >= arrival.
+    v_arr = jnp.sum(jnp.where(mask, jnp.maximum(inst.arrival - start, 0), 0))
+
+    # Eq. 5: for every edge (u -> t): start[t] >= comp[u].
+    gap = comp[None, :] - start[:, None]          # [t, u]: must be <= 0 on edges
+    v_dep = jnp.sum(jnp.where(inst.pred & mask[:, None] & mask[None, :],
+                              jnp.maximum(gap, 0), 0))
+
+    # Eq. 6: assigned machine must be allowed.
+    ok = jnp.take_along_axis(inst.allowed, assign[:, None], axis=1)[:, 0]
+    v_mach = jnp.sum(jnp.where(mask & ~ok, 1, 0))
+
+    # Eq. 8: no-overlap — for every pair on the same machine, intervals must
+    # be disjoint. Overlap(a,b) = max(0, min(end) - max(start)).
+    same_m = (assign[:, None] == assign[None, :])
+    both = mask[:, None] & mask[None, :]
+    iu = ~jnp.tri(T, dtype=bool)  # strictly upper: each unordered pair once
+    ov = jnp.minimum(comp[:, None], comp[None, :]) - \
+        jnp.maximum(start[:, None], start[None, :])
+    v_olap = jnp.sum(jnp.where(same_m & both & iu, jnp.maximum(ov, 0), 0))
+
+    if deadline is None:
+        v_bud = jnp.int32(0)
+    else:
+        over = comp - jnp.asarray(deadline).astype(jnp.int32)
+        v_bud = jnp.sum(jnp.where(mask, jnp.maximum(over, 0), 0))
+
+    return ViolationReport(v_arr.astype(jnp.int32), v_dep.astype(jnp.int32),
+                           v_mach.astype(jnp.int32), v_olap.astype(jnp.int32),
+                           v_bud.astype(jnp.int32))
+
+
+def total_violations(inst: PackedInstance, start: jnp.ndarray,
+                     assign: jnp.ndarray,
+                     deadline: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Scalar violation mass (0 == feasible); machine violations weighted so a
+    single disallowed assignment dominates any epoch-mass term (solvers use
+    this as a penalty)."""
+    r = violation_report(inst, start, assign, deadline)
+    return (r.arrival + r.precedence + r.machine * _MACHINE_WEIGHT
+            + r.overlap + r.budget).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# numpy / Python path — human-readable reports for tests and oracles.
+# ---------------------------------------------------------------------------
+
+def check_feasible_np(inst: PackedInstance, start, assign,
+                      deadline: int | None = None) -> list[str]:
+    """Python-level feasibility report: one string per violation, [] if
+    feasible.  Same semantics as :func:`violation_report` (independent
+    implementation, so the two paths cross-check each other in tests)."""
+    start = np.asarray(start)
+    assign = np.asarray(assign)
+    dur = np.asarray(inst.dur)
+    mask = np.asarray(inst.task_mask)
+    pred = np.asarray(inst.pred)
+    arr = np.asarray(inst.arrival)
+    allowed = np.asarray(inst.allowed)
+    probs = []
+    T = dur.shape[0]
+    comp = start + dur[np.arange(T), assign]
+    for t in range(T):
+        if not mask[t]:
+            continue
+        if not allowed[t, assign[t]]:
+            probs.append(f"task {t}: machine {assign[t]} not allowed")
+        if start[t] < arr[t]:
+            probs.append(f"task {t}: starts {start[t]} before arrival {arr[t]}")
+        if deadline is not None and comp[t] > deadline:
+            probs.append(f"task {t}: ends {comp[t]} past deadline {deadline}")
+        for u in range(T):
+            if pred[t, u] and mask[u] and start[t] < comp[u]:
+                probs.append(f"task {t}: starts {start[t]} before pred {u} ends {comp[u]}")
+        for u in range(t + 1, T):
+            if mask[u] and assign[u] == assign[t]:
+                if max(start[t], start[u]) < min(comp[t], comp[u]):
+                    probs.append(f"tasks {t},{u} overlap on machine {assign[t]}")
+    return probs
+
+
+def assert_feasible_np(inst: PackedInstance, start, assign,
+                       deadline: int | None = None, ctx: str = "") -> None:
+    """Raise ``AssertionError`` with the full problem list if infeasible."""
+    probs = check_feasible_np(inst, start, assign, deadline)
+    if probs:
+        head = f"infeasible schedule{f' ({ctx})' if ctx else ''}:"
+        raise AssertionError("\n  ".join([head] + probs))

@@ -1,9 +1,86 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real single CPU device; only launch/dryrun.py forces 512."""
+"""Shared fixtures + a soft-dependency shim for ``hypothesis``.
+
+Tier-1 must *collect and run* in a clean environment.  When ``hypothesis``
+is installed (see requirements-dev.txt) the property tests use the real
+library; when it is absent, a minimal stand-in is injected into
+``sys.modules`` before test modules import it, and every ``@given`` test
+skips at call time with a clear reason instead of failing collection.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see the real single
+CPU device; only launch/dryrun.py forces 512.
+"""
 import numpy as np
 import pytest
 
 import jax
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import sys
+    import types
+
+    _SKIP_REASON = ("hypothesis not installed — property test skipped "
+                    "(pip install -r requirements-dev.txt)")
+
+    class _Strategy:
+        """Inert placeholder; only ever carried through decorators."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __repr__(self):
+            return "<hypothesis stub strategy>"
+
+        # @st.composite-decorated functions are *called* at module scope to
+        # build strategies — collection must survive that.
+        def __call__(self, *a, **k):
+            return self
+
+        # chained combinators used in strategy expressions
+        def map(self, *a, **k):
+            return self
+
+        def filter(self, *a, **k):
+            return self
+
+        def flatmap(self, *a, **k):
+            return self
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "booleans", "floats", "sampled_from", "lists",
+                  "tuples", "just", "one_of", "none", "text", "composite"):
+        setattr(_st, _name, lambda *a, **k: _Strategy())
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():  # zero-arg: strategy params must not look like fixtures
+                pytest.skip(_SKIP_REASON)
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    _settings.register_profile = lambda *a, **k: None
+    _settings.load_profile = lambda *a, **k: None
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.assume = lambda *a, **k: True
+    _hyp.note = lambda *a, **k: None
+    _hyp.example = lambda *a, **k: (lambda fn: fn)
+    _hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    _hyp.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

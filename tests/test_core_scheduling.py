@@ -11,13 +11,13 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.core import generate_instance, pack, synthesize
+from repro.core import generate_instance, pack, synthesize, validate
 from repro.core.carbon import constant, sample_window
 from repro.core.decoder import sgs, timing_sweep, upward_rank
 from repro.core.instance import DAG_SHAPES, Job, Instance
-from repro.core.objectives import (carbon, check_feasible_np, energy,
-                                   evaluate, makespan, utilization,
-                                   violations)
+from repro.core.objectives import (carbon, energy, evaluate, makespan,
+                                   utilization)
+from repro.core.validate import check_feasible_np, total_violations as violations
 from repro.core.solvers import solve_bilevel, solve_ga, solve_sa
 from repro.core.solvers.annealing import SAConfig
 from repro.core.solvers.common import decode_full
@@ -89,6 +89,32 @@ def test_timing_sweep_feasible_and_monotone(seed):
     assert int(violations(p, start2, dec.assign)) == 0
     assert int(makespan(p, start2, dec.assign)) <= int(deadline)
     assert float(carbon(p, start2, dec.assign, cum)) <= float(c0) + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), slack=st.integers(0, 40))
+def test_timing_sweep_docstring_invariants(seed, slack):
+    """What the timing_sweep docstring promises: carbon is monotone
+    non-increasing as sweeps stack, feasibility (shared validator) is
+    preserved, and the deadline is never exceeded."""
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, n_jobs=3, k_tasks=4, n_machines=3,
+                             heterogeneous=bool(seed % 2))
+    p = pack(inst)
+    cum = _trace_cum(rng)
+    dec = sgs(p, jnp.asarray(rng.normal(size=p.T), jnp.float32))
+    deadline = jnp.int32(int(makespan(p, dec.start, dec.assign)) + slack)
+    prev = float(carbon(p, dec.start, dec.assign, cum))
+    for sweeps in (1, 2, 3):
+        s = timing_sweep(p, dec.start, dec.assign, cum, deadline,
+                         sweeps=sweeps)
+        rep = validate.violation_report(p, s, dec.assign, deadline)
+        assert all(int(v) == 0 for v in rep)     # feasible incl. deadline
+        assert not validate.check_feasible_np(p, s, dec.assign,
+                                              int(deadline))
+        c = float(carbon(p, s, dec.assign, cum))
+        assert c <= prev + 1e-3                  # monotone across sweeps
+        prev = c
 
 
 def test_upward_rank_tops_roots(rng):

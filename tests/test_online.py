@@ -5,9 +5,9 @@ from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core import generate_instance, pack, synthesize
+from repro.core import generate_instance, pack, synthesize, validate
 from repro.core.carbon import constant, sample_window
-from repro.core.objectives import check_feasible_np, evaluate
+from repro.core.objectives import evaluate
 from repro.core.solvers.online import online_carbon_gated, online_greedy
 
 
@@ -20,9 +20,11 @@ def test_online_schedules_feasible(seed, hetero):
     p = pack(inst)
     w = sample_window(synthesize("AU-SA", days=10), rng, 1500)
     s0, a0 = online_greedy(p)
-    assert not check_feasible_np(p, s0, a0)
+    validate.assert_feasible_np(p, s0, a0, ctx="online_greedy")
+    assert int(validate.total_violations(p, jnp.asarray(s0),
+                                         jnp.asarray(a0))) == 0
     sg, ag = online_carbon_gated(p, w.intensity, stretch=1.5)
-    assert not check_feasible_np(p, sg, ag)
+    validate.assert_feasible_np(p, sg, ag, ctx="online_carbon_gated")
 
 
 def test_gate_respects_makespan_budget():

@@ -1,0 +1,151 @@
+"""Batched JAX online dispatcher vs the sequential numpy oracle.
+
+The `online_jax` scan simulator must reproduce `online.py` *exactly* —
+same (start, assign) arrays — on every DAG shape, homogeneous and
+heterogeneous machine menus, and across the gate-policy grid.  Property
+tests (hypothesis) randomize; the parametrized tests pin fixed seeds so the
+equivalence is exercised even without hypothesis installed.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, stack_packed, synthesize, validate
+from repro.core.carbon import sample_window
+from repro.core.instance import DAG_SHAPES
+from repro.core.objectives import evaluate
+from repro.core.solvers.online import (_critical_path, online_carbon_gated,
+                                       online_greedy)
+from repro.core.solvers.online_jax import (downstream_critical_path,
+                                           dirty_mask, online_carbon_gated_jax,
+                                           online_greedy_jax, policy_grid,
+                                           sweep_policies)
+
+HORIZON = 700
+
+
+def _case(seed, shape, hetero, n_jobs=4, k_tasks=3, n_machines=3):
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, n_jobs=n_jobs, k_tasks=k_tasks,
+                             n_machines=n_machines, heterogeneous=hetero,
+                             shape=shape)
+    p = pack(inst)
+    w = sample_window(synthesize("AU-SA", days=10), rng, HORIZON)
+    return p, w
+
+
+def _assert_equiv(p, w, theta, window, stretch):
+    s0, a0 = online_greedy(p)
+    g = online_greedy_jax(p, HORIZON)
+    assert bool(np.asarray(g.scheduled | ~p.task_mask).all())
+    np.testing.assert_array_equal(s0, np.asarray(g.start))
+    np.testing.assert_array_equal(a0, np.asarray(g.assign))
+
+    sg, ag = online_carbon_gated(p, w.intensity, theta=theta, window=window,
+                                 stretch=stretch)
+    c = online_carbon_gated_jax(p, w.intensity, theta=theta, window=window,
+                                stretch=stretch)
+    np.testing.assert_array_equal(sg, np.asarray(c.start))
+    np.testing.assert_array_equal(ag, np.asarray(c.assign))
+    # and both are validator-clean (Eqs. 4-8)
+    assert int(validate.total_violations(p, c.start, c.assign)) == 0
+
+
+@pytest.mark.parametrize("shape", DAG_SHAPES)
+@pytest.mark.parametrize("seed,hetero", [(0, False), (1, True)])
+def test_online_jax_matches_numpy_fixed_seeds(seed, shape, hetero):
+    p, w = _case(seed, shape, hetero)
+    _assert_equiv(p, w, theta=0.4, window=96, stretch=1.5)
+
+
+# derandomize: exact (start, assign) equality is float-fragile only in the
+# astronomically thin band where intensity[t] sits within a float32 ulp of
+# the float64 np.quantile threshold — a fixed example set keeps the property
+# meaningful without that band ever flaking CI on a fresh random seed.
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000),
+       shape=st.sampled_from(DAG_SHAPES),
+       hetero=st.booleans(),
+       theta=st.sampled_from([0.25, 0.3, 0.5, 0.75]),
+       window=st.sampled_from([24, 48, 96]),
+       stretch=st.sampled_from([1.25, 1.5, 2.0]))
+def test_online_jax_matches_numpy_property(seed, shape, hetero, theta,
+                                           window, stretch):
+    p, w = _case(seed, shape, hetero)
+    _assert_equiv(p, w, theta, window, stretch)
+
+
+def test_critical_path_matches_numpy():
+    for seed in range(5):
+        p, _ = _case(seed, DAG_SHAPES[seed % 3], bool(seed % 2))
+        dur = np.asarray(p.dur)
+        cp_np = _critical_path(dur, np.asarray(p.allowed), np.asarray(p.pred),
+                               np.asarray(p.task_mask))
+        cp_jax = np.asarray(downstream_critical_path(p))
+        np.testing.assert_array_equal(cp_np, cp_jax)
+
+
+def test_dirty_mask_matches_np_quantile():
+    rng = np.random.default_rng(3)
+    w = sample_window(synthesize("CAL", days=10), rng, 300)
+    inten = w.intensity
+    for theta in (0.25, 0.4, 0.5, 0.9):
+        for window in (16, 96):
+            ref = np.zeros(len(inten), bool)
+            for t in range(len(inten)):
+                win = inten[t:min(t + window, len(inten))]
+                ref[t] = inten[t] > np.quantile(win, theta) + 1e-9
+            got = np.asarray(dirty_mask(jnp.asarray(inten),
+                                        jnp.float32(theta),
+                                        jnp.int32(window),
+                                        max_window=window))
+            np.testing.assert_array_equal(ref, got)
+
+
+def test_sweep_matches_single_instance_calls():
+    packs, intens = [], []
+    for seed in range(3):
+        p, w = _case(seed, DAG_SHAPES[seed], hetero=bool(seed % 2),
+                     n_jobs=3, k_tasks=3)
+        packs.append(p)
+        intens.append(w.intensity)
+    batch = stack_packed(packs)
+    inten = jnp.asarray(np.stack(intens))
+    thetas, windows, stretches = [0.3, 0.5], [48, 96], [1.5]
+    res = sweep_policies(batch, inten, thetas, windows, stretches)
+    th, wi, sx = (np.asarray(a) for a in
+                  policy_grid(thetas, windows, stretches))
+    assert res.gated.start.shape[:2] == (3, len(th))
+    for b, p in enumerate(packs):
+        g = online_greedy_jax(p, HORIZON)
+        np.testing.assert_array_equal(np.asarray(g.start),
+                                      np.asarray(res.greedy.start[b]))
+        for j in range(len(th)):
+            c = online_carbon_gated_jax(p, intens[b], theta=float(th[j]),
+                                        window=int(wi[j]),
+                                        stretch=float(sx[j]))
+            np.testing.assert_array_equal(np.asarray(c.start),
+                                          np.asarray(res.gated.start[b, j]))
+            np.testing.assert_array_equal(np.asarray(c.assign),
+                                          np.asarray(res.gated.assign[b, j]))
+    assert bool(np.asarray(res.gated.scheduled
+                           | ~batch.task_mask[:, None, :]).all())
+
+
+def test_gated_jax_saves_carbon_and_respects_stretch():
+    rng = np.random.default_rng(5)
+    savings = []
+    for seed in range(3):
+        p, w = _case(seed, None, False, n_jobs=6, k_tasks=4, n_machines=5)
+        cum = jnp.asarray(w.cumulative())
+        g = online_greedy_jax(p, HORIZON)
+        c = online_carbon_gated_jax(p, w.intensity, theta=0.4, stretch=1.5)
+        base = evaluate(p, g.start, g.assign, cum)
+        gated = evaluate(p, c.start, c.assign, cum)
+        savings.append(1 - float(gated.carbon) / float(base.carbon))
+        # critical-path gating bounds makespan up to machine-contention tails
+        assert int(gated.makespan) <= 1.5 * int(base.makespan) * 1.10 + 1
+    assert np.mean(savings) > 0.05

@@ -1,0 +1,156 @@
+"""The shared feasibility validator (core/validate): both paths, every
+constraint, and agreement between the jnp and numpy implementations."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, stack_packed, validate
+from repro.core.decoder import sgs, upward_rank
+from repro.core.instance import Instance, Job
+from repro.core.solvers.online import online_greedy
+
+
+def _two_task_instance(arrival=2, n_machines=2, allowed=None):
+    job = Job(arrival=arrival, base_durations=(2, 2), edges=((0, 1),))
+    return pack(Instance(jobs=(job,), powers_kw=(1.0,) * n_machines,
+                         speeds=(1.0,) * n_machines, allowed=allowed))
+
+
+FEASIBLE = (jnp.asarray([2, 4], jnp.int32), jnp.asarray([0, 1], jnp.int32))
+
+
+def test_feasible_schedule_passes_both_paths():
+    p = _two_task_instance()
+    rep = validate.violation_report(p, *FEASIBLE)
+    assert all(int(v) == 0 for v in rep)
+    assert bool(rep.feasible)
+    assert int(validate.total_violations(p, *FEASIBLE)) == 0
+    assert validate.check_feasible_np(p, *FEASIBLE) == []
+    validate.assert_feasible_np(p, *FEASIBLE)  # must not raise
+
+
+def test_pre_arrival_start_flagged():
+    p = _two_task_instance(arrival=2)
+    start = jnp.asarray([0, 4], jnp.int32)
+    rep = validate.violation_report(p, start, FEASIBLE[1])
+    assert int(rep.arrival) > 0
+    assert int(rep.precedence) == int(rep.machine) == int(rep.overlap) == 0
+    probs = validate.check_feasible_np(p, start, FEASIBLE[1])
+    assert len(probs) == 1 and "before arrival" in probs[0]
+
+
+def test_precedence_violation_flagged():
+    p = _two_task_instance()
+    start = jnp.asarray([2, 3], jnp.int32)     # task 1 starts before 0 ends
+    rep = validate.violation_report(p, start, FEASIBLE[1])
+    assert int(rep.precedence) > 0
+    assert int(rep.arrival) == int(rep.machine) == 0
+    probs = validate.check_feasible_np(p, start, FEASIBLE[1])
+    assert any("before pred" in s for s in probs)
+
+
+def test_overlap_on_one_machine_flagged():
+    p = _two_task_instance()
+    start = jnp.asarray([2, 2], jnp.int32)
+    assign = jnp.asarray([0, 0], jnp.int32)
+    rep = validate.violation_report(p, start, assign)
+    assert int(rep.overlap) > 0
+    probs = validate.check_feasible_np(p, start, assign)
+    assert any("overlap" in s for s in probs)
+
+
+def test_disallowed_machine_flagged():
+    # task 0 may only run on machine 0; assign it machine 1.
+    p = _two_task_instance(allowed=(((0,), (0, 1)),))
+    assign = jnp.asarray([1, 1], jnp.int32)
+    start = jnp.asarray([2, 1 << 21], jnp.int32)  # keep precedence clean
+    rep = validate.violation_report(p, start, assign)
+    assert int(rep.machine) == 1
+    # one disallowed assignment outweighs any epoch mass in the scalar form
+    assert int(validate.total_violations(p, start, assign)) >= 10**6
+    probs = validate.check_feasible_np(p, start, assign)
+    assert any("not allowed" in s for s in probs)
+
+
+def test_budget_overshoot_flagged():
+    p = _two_task_instance()
+    rep = validate.violation_report(p, *FEASIBLE, deadline=jnp.int32(5))
+    assert int(rep.budget) == 1          # completion 6 vs deadline 5
+    assert not bool(rep.feasible)
+    rep_ok = validate.violation_report(p, *FEASIBLE, deadline=jnp.int32(6))
+    assert bool(rep_ok.feasible)
+    probs = validate.check_feasible_np(p, *FEASIBLE, deadline=5)
+    assert len(probs) == 1 and "past deadline" in probs[0]
+    with pytest.raises(AssertionError, match="past deadline"):
+        validate.assert_feasible_np(p, *FEASIBLE, deadline=5, ctx="bench")
+
+
+def test_padding_tasks_ignored():
+    job = Job(arrival=0, base_durations=(2,), edges=())
+    p = pack(Instance(jobs=(job,), powers_kw=(1.0,), speeds=(1.0,)),
+             pad_tasks=6)
+    # padded tasks all "start" at 0 on machine 0 — must not count as overlap
+    start = jnp.zeros(6, jnp.int32)
+    assign = jnp.zeros(6, jnp.int32)
+    assert int(validate.total_violations(p, start, assign)) == 0
+    assert validate.check_feasible_np(p, start, assign) == []
+
+
+def test_validator_is_jit_and_vmap_friendly(rng):
+    insts = []
+    for seed in range(4):
+        r = np.random.default_rng(seed)
+        insts.append(pack(generate_instance(r, n_jobs=3, k_tasks=3,
+                                            n_machines=3), pad_tasks=9))
+    batch = stack_packed(insts)
+    starts, assigns = [], []
+    for p in insts:
+        dec = sgs(p, upward_rank(p))
+        starts.append(dec.start)
+        assigns.append(dec.assign)
+    v = jax.jit(jax.vmap(validate.total_violations))(
+        batch, jnp.stack(starts), jnp.stack(assigns))
+    assert v.shape == (4,) and int(np.asarray(v).sum()) == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_jnp_and_numpy_paths_agree_on_random_schedules(seed):
+    """total_violations == 0 exactly when check_feasible_np reports nothing,
+    on arbitrary (mostly infeasible) random schedules."""
+    r = np.random.default_rng(seed)
+    inst = generate_instance(r, n_jobs=3, k_tasks=3, n_machines=3,
+                             heterogeneous=bool(seed % 2))
+    p = pack(inst)
+    start = jnp.asarray(r.integers(0, 60, p.T), jnp.int32)
+    assign = jnp.asarray(r.integers(0, p.M, p.T), jnp.int32)
+    deadline = int(r.integers(10, 120))
+    jfeas = int(validate.total_violations(p, start, assign,
+                                          jnp.int32(deadline))) == 0
+    nfeas = validate.check_feasible_np(p, start, assign, deadline) == []
+    assert jfeas == nfeas
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_every_produced_schedule_passes_validator(seed):
+    """Decoded (SGS) and online-dispatched schedules are validator-clean."""
+    r = np.random.default_rng(seed)
+    inst = generate_instance(r, n_jobs=3, k_tasks=3, n_machines=3,
+                             heterogeneous=bool(seed % 2))
+    p = pack(inst)
+    dec = sgs(p, jnp.asarray(r.normal(size=p.T), jnp.float32))
+    assert int(validate.total_violations(p, dec.start, dec.assign)) == 0
+    s0, a0 = online_greedy(p)
+    validate.assert_feasible_np(p, s0, a0, ctx="online_greedy")
+
+
+def test_objectives_reexports_still_work():
+    """Historical import path (repro.core.objectives) stays usable."""
+    from repro.core.objectives import check_feasible_np, violations
+    p = _two_task_instance()
+    assert int(violations(p, *FEASIBLE)) == 0
+    assert check_feasible_np(p, *FEASIBLE) == []
