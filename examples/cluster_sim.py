@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.cluster import ClusterExecutor, make_cluster_instance
 from repro.cluster.executor import FaultPlan
 from repro.cluster.workloads import sample_daily_batch
-from repro.core import pack, synthesize
+from repro.core import pack, synthesize, validate
 from repro.core.carbon import sample_window
 
 
@@ -43,6 +43,9 @@ def main():
 
     ex = ClusterExecutor(p, cum, stretch=args.stretch, seed=args.seed)
     plan = ex.plan()
+    # Shared validator (Eqs. 4-8) before anything executes.
+    validate.assert_feasible_np(p, plan["start"], plan["assign"],
+                                ctx="cluster plan")
     print(f"\ncarbon-aware plan (S={args.stretch}): makespan "
           f"{plan['makespan']} epochs, carbon {plan['carbon']:,.0f} gCO2")
 

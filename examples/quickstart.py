@@ -11,7 +11,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import generate_instance, pack, synthesize
+from repro.core import generate_instance, pack, synthesize, validate
 from repro.core.carbon import sample_window
 from repro.core.solvers import solve_bilevel
 from repro.core.solvers.annealing import SAConfig
@@ -49,6 +49,14 @@ def main():
     dur = np.asarray(p.dur)
     base, opt = res.baseline, res.optimized
     mask = np.asarray(p.task_mask)
+
+    # Both schedules through the shared validator (Eqs. 4-8 + deadline).
+    validate.assert_feasible_np(p, np.asarray(base.start),
+                                np.asarray(base.assign), ctx="baseline")
+    validate.assert_feasible_np(p, np.asarray(opt.start),
+                                np.asarray(opt.assign),
+                                deadline=int(res.deadline),
+                                ctx="carbon-aware")
 
     print(f"\noptimal makespan (carbon-agnostic): {int(res.opt_makespan)} "
           f"epochs ({int(res.opt_makespan) / 4:.1f} h)")

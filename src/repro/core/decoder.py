@@ -104,7 +104,8 @@ def sgs(inst: PackedInstance, prio: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("sweeps",))
 def timing_sweep(inst: PackedInstance, start: jnp.ndarray,
                  assign: jnp.ndarray, cum: jnp.ndarray,
-                 deadline: jnp.ndarray, sweeps: int = 2) -> jnp.ndarray:
+                 deadline: jnp.ndarray, sweeps: int = 2,
+                 frozen: jnp.ndarray | None = None) -> jnp.ndarray:
     """Carbon-greedy timing pass.
 
     Keeps sequencing (per-machine order and DAG order) fixed and pushes each
@@ -114,6 +115,11 @@ def timing_sweep(inst: PackedInstance, start: jnp.ndarray,
     machine) final before the task itself is placed, so a sweep preserves
     feasibility; extra sweeps exploit slack opened by earlier sweeps.
 
+    ``frozen`` (optional bool [T]) pins tasks in place: a frozen task is
+    never moved, but still constrains its neighbours — the rolling replanner
+    (:mod:`repro.core.solvers.rolling`) freezes tasks that have already
+    started executing, which cannot be shifted retroactively.
+
     With fixed sequences this is coordinate descent on the separable
     start-time-cost problem — cheap, monotone (never increases carbon), and
     exact in the common case of a task whose window covers a clean valley.
@@ -122,6 +128,7 @@ def timing_sweep(inst: PackedInstance, start: jnp.ndarray,
     H = cum.shape[0] - 1
     d = task_durations(inst, assign)
     real = inst.task_mask
+    sweepable = real if frozen is None else real & ~frozen
     svec = jnp.arange(H + 1, dtype=jnp.int32)
     # cost_at[t, s] lookup pieces: delta(s; d) = cum[s+d] - cum[s].
     same_m = (assign[:, None] == assign[None, :]) & real[None, :]
@@ -143,7 +150,7 @@ def timing_sweep(inst: PackedInstance, start: jnp.ndarray,
             cost = cum[jnp.minimum(svec + dt, H)] - cum[svec]
             cost = jnp.where((svec >= lo) & (svec <= hi), cost, jnp.inf)
             s_star = jnp.argmin(cost).astype(jnp.int32)
-            movable = real[t] & (hi >= lo)
+            movable = sweepable[t] & (hi >= lo)
             new_s = jnp.where(movable, s_star, start_cur[t])
             return start_cur.at[t].set(new_s), None
 

@@ -7,6 +7,8 @@ from repro.core.solvers.online_jax import (OnlineSchedule, SweepResult,
                                            online_carbon_gated_jax,
                                            online_greedy_jax, policy_grid,
                                            simulate_online, sweep_policies)
+from repro.core.solvers.rolling import (MPCConfig, MPCResult, solve_mpc,
+                                        solve_mpc_batch)
 
 __all__ = [
     "ScheduleResult", "fitness_fn", "decode_full", "solve_sa", "solve_ga",
@@ -14,4 +16,5 @@ __all__ = [
     "online_carbon_gated", "online_greedy",
     "OnlineSchedule", "SweepResult", "online_carbon_gated_jax",
     "online_greedy_jax", "policy_grid", "simulate_online", "sweep_policies",
+    "MPCConfig", "MPCResult", "solve_mpc", "solve_mpc_batch",
 ]

@@ -46,19 +46,29 @@ def solve_sa(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
              key: jax.Array, objective: str = "carbon",
              machine_rule: str = "fixed", cfg: SAConfig = SAConfig(),
              prio_init: jnp.ndarray | None = None,
-             assign_init: jnp.ndarray | None = None) -> SolveOut:
-    """Minimize ``objective`` (see solvers.common) over SGS candidates."""
+             assign_init: jnp.ndarray | None = None,
+             frozen: jnp.ndarray | None = None) -> SolveOut:
+    """Minimize ``objective`` (see solvers.common) over SGS candidates.
+
+    ``frozen`` (optional bool [T]) marks already-executing tasks (rolling
+    replans): their priorities are never perturbed — init noise, proposals
+    and migration all mask them — so the executed prefix the caller encoded
+    in ``prio_init``/``assign_init`` survives the whole search exactly, and
+    the timing sweep inside the decode never moves them either.
+    """
     T = inst.T
+    free = (jnp.ones((T,), bool) if frozen is None else ~frozen)
     sweeps = 0 if objective == "makespan" else cfg.sweeps
     fit_v = jax.vmap(lambda p, a: common.fitness_fn(
-        inst, cum, deadline, p, a, objective, machine_rule, sweeps))
+        inst, cum, deadline, p, a, objective, machine_rule, sweeps,
+        frozen=frozen))
 
     k_init, k_assign, k_run = jax.random.split(key, 3)
     rank = upward_rank(inst)
     if prio_init is None:
         prio_init = rank
     prio = (prio_init[None, :]
-            + cfg.sigma * jax.random.normal(k_init, (cfg.pop, T)))
+            + cfg.sigma * jax.random.normal(k_init, (cfg.pop, T)) * free)
     # Keep one undisturbed copy of the init (chain 0).
     prio = prio.at[0].set(prio_init)
     if assign_init is None:
@@ -79,7 +89,7 @@ def solve_sa(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
         temp = t0 * cfg.t_decay ** it
 
         # Priority proposal: gaussian noise on a random ~2-task subset.
-        mask = jax.random.bernoulli(k1, 2.0 / T, (cfg.pop, T))
+        mask = jax.random.bernoulli(k1, 2.0 / T, (cfg.pop, T)) & free
         dp = cfg.sigma * jax.random.normal(k2, (cfg.pop, T)) * mask
         new_prio = prio + dp
         # Machine proposal: with prob p, reassign one random task.
@@ -114,7 +124,7 @@ def solve_sa(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
             thresh = jnp.percentile(fit, 75)
             worst = fit >= thresh
             mp = best[0][None, :] + cfg.sigma * jax.random.normal(
-                kk1, (cfg.pop, T))
+                kk1, (cfg.pop, T)) * free
             prio = jnp.where(worst[:, None], mp, prio)
             assign = jnp.where(worst[:, None],
                                jnp.broadcast_to(best[1], (cfg.pop, T)), assign)

@@ -2,9 +2,14 @@
 
 A candidate is ``(prio[T] float32, assign[T] int32)``.  Decoding = SGS
 (+ carbon timing sweep for the carbon/energy objectives); fitness = the
-objective plus a large penalty per epoch of deadline violation, so the
-constrained problem (makespan <= S * OPT) is handled by the same
-unconstrained search.
+objective plus a penalty proportional to the shared validator's violation
+mass (:func:`repro.core.validate.total_violations`, Eqs. 4-8 + budget), so
+the constrained problem (makespan <= S * OPT) is handled by the same
+unconstrained search.  SGS output is feasible for Eqs. 4-8 by construction,
+so for plain solves only the budget term can fire — but routing the penalty
+through the validator means *any* constraint a decode path might miss (e.g.
+a frozen-prefix instance transform) is priced by the same source of truth
+the tests check.
 
 The paper's energy objective uses carbon as a tiny tie-break weight
 (Section 3.2, "Optimizing for energy usage vs carbon emissions") — we use
@@ -22,9 +27,10 @@ import jax.numpy as jnp
 from repro.core.decoder import sgs, timing_sweep
 from repro.core.instance import PackedInstance
 from repro.core.objectives import Objectives, evaluate, utilization
+from repro.core.validate import total_violations
 
 OBJECTIVES = ("makespan", "carbon", "energy")
-DEADLINE_PENALTY = 1e5       # fitness units per epoch of overshoot
+VIOLATION_PENALTY = 1e5      # fitness units per unit of validator mass
 ENERGY_CARBON_TIEBREAK = 1e-6
 
 
@@ -42,28 +48,42 @@ class ScheduleResult(NamedTuple):
 def decode_full(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
                 prio: jnp.ndarray, assign: jnp.ndarray,
                 objective: str = "carbon", machine_rule: str = "fixed",
-                sweeps: int = 2) -> ScheduleResult:
-    """Candidate -> feasible schedule + objective values."""
+                sweeps: int = 2,
+                frozen: jnp.ndarray | None = None) -> ScheduleResult:
+    """Candidate -> feasible schedule + objective values.
+
+    ``frozen`` (optional bool [T]) marks already-executing tasks the timing
+    sweep must not move (rolling replans); SGS placement of frozen tasks is
+    pinned upstream via the instance transform + priority band (see
+    :mod:`repro.core.solvers.rolling`).
+    """
     dec = sgs(inst, prio, assign, machine_rule=machine_rule)
     start = dec.start
     if objective != "makespan" and sweeps > 0:
-        start = timing_sweep(inst, start, dec.assign, cum, deadline, sweeps)
+        start = timing_sweep(inst, start, dec.assign, cum, deadline, sweeps,
+                             frozen=frozen)
     obj: Objectives = evaluate(inst, start, dec.assign, cum)
     return ScheduleResult(start, dec.assign, obj.makespan, obj.energy,
                           obj.carbon, utilization(inst, start, dec.assign))
 
 
-def fitness_of(res: ScheduleResult, deadline: jnp.ndarray,
-               objective: str) -> jnp.ndarray:
-    ms = res.makespan.astype(jnp.float32)
-    over = jnp.maximum(ms - deadline.astype(jnp.float32), 0.0)
+def fitness_of(inst: PackedInstance, res: ScheduleResult,
+               deadline: jnp.ndarray, objective: str) -> jnp.ndarray:
+    """Objective value + validator-priced infeasibility penalty.
+
+    The penalty term is the shared validator's scalar violation mass
+    (arrival/precedence/overlap epochs, weighted disallowed assignments,
+    epochs past ``deadline``) — zero iff the schedule is feasible, so the
+    unconstrained search and the feasibility tests agree on what counts.
+    """
     if objective == "makespan":
-        return ms
+        return res.makespan.astype(jnp.float32)
+    pen = VIOLATION_PENALTY * total_violations(
+        inst, res.start, res.assign, deadline).astype(jnp.float32)
     if objective == "carbon":
-        return res.carbon + DEADLINE_PENALTY * over
+        return res.carbon + pen
     if objective == "energy":
-        return (res.energy + ENERGY_CARBON_TIEBREAK * res.carbon
-                + DEADLINE_PENALTY * over)
+        return res.energy + ENERGY_CARBON_TIEBREAK * res.carbon + pen
     raise ValueError(f"unknown objective {objective!r}")
 
 
@@ -71,11 +91,12 @@ def fitness_of(res: ScheduleResult, deadline: jnp.ndarray,
                    static_argnames=("objective", "machine_rule", "sweeps"))
 def fitness_fn(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
                prio: jnp.ndarray, assign: jnp.ndarray, objective: str,
-               machine_rule: str, sweeps: int) -> jnp.ndarray:
+               machine_rule: str, sweeps: int,
+               frozen: jnp.ndarray | None = None) -> jnp.ndarray:
     res = decode_full(inst, cum, deadline, prio, assign,
                       objective=objective, machine_rule=machine_rule,
-                      sweeps=sweeps)
-    return fitness_of(res, deadline, objective)
+                      sweeps=sweeps, frozen=frozen)
+    return fitness_of(inst, res, deadline, objective)
 
 
 def random_allowed_assign(key: jax.Array, inst: PackedInstance,

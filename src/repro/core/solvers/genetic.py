@@ -36,15 +36,21 @@ def solve_ga(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
              key: jax.Array, objective: str = "carbon",
              machine_rule: str = "fixed", cfg: GAConfig = GAConfig(),
              prio_init: jnp.ndarray | None = None,
-             assign_init: jnp.ndarray | None = None) -> SolveOut:
+             assign_init: jnp.ndarray | None = None,
+             frozen: jnp.ndarray | None = None) -> SolveOut:
     T = inst.T
+    # Frozen tasks (rolling replans) keep their exact priorities: init noise
+    # and mutations are masked, and crossover mixes identical frozen genes.
+    free = (jnp.ones((T,), bool) if frozen is None else ~frozen)
     sweeps = 0 if objective == "makespan" else cfg.sweeps
     fit_v = jax.vmap(lambda p, a: common.fitness_fn(
-        inst, cum, deadline, p, a, objective, machine_rule, sweeps))
+        inst, cum, deadline, p, a, objective, machine_rule, sweeps,
+        frozen=frozen))
 
     k_init, k_assign, k_run = jax.random.split(key, 3)
     base = upward_rank(inst) if prio_init is None else prio_init
-    prio = base[None, :] + cfg.sigma * jax.random.normal(k_init, (cfg.pop, T))
+    prio = base[None, :] + cfg.sigma * jax.random.normal(
+        k_init, (cfg.pop, T)) * free
     prio = prio.at[0].set(base)
     if assign_init is None:
         assign = common.random_allowed_assign(k_assign, inst, (cfg.pop,))
@@ -71,7 +77,7 @@ def solve_ga(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
 
         # Mutation.
         mut_p = jax.random.bernoulli(k4, cfg.p_mut_prio, (cfg.pop, 1)) & \
-            jax.random.bernoulli(k5, 2.0 / T, (cfg.pop, T))
+            jax.random.bernoulli(k5, 2.0 / T, (cfg.pop, T)) & free
         child_p = child_p + mut_p * cfg.sigma * jax.random.normal(
             k5, (cfg.pop, T))
         mut_m = jax.random.bernoulli(k6, cfg.p_mut_mach, (cfg.pop, 1)) & \

@@ -24,6 +24,16 @@ import numpy as np
 
 from repro.core.instance import PackedInstance
 
+# Machine choice among the *free* allowed machines at dispatch time (all
+# candidates start now, so min duration == earliest finish):
+#   earliest_finish — (duration, energy) lexicographic: the makespan-greedy
+#                     rule of the Graham list scheduler.
+#   min_energy      — (energy, duration) lexicographic: ROADMAP's "min-energy
+#                     dispatch under the gate"; trades completion time for
+#                     power-proportional cost on heterogeneous menus.
+# Ties beyond the key fall to the lowest machine index (stable min).
+ONLINE_MACHINE_RULES = ("earliest_finish", "min_energy")
+
 
 def _np_inst(inst: PackedInstance):
     return (np.asarray(inst.dur), np.asarray(inst.allowed),
@@ -45,7 +55,10 @@ def _critical_path(dur, allowed, pred, mask) -> np.ndarray:
 
 
 def _simulate(inst: PackedInstance, intensity: np.ndarray | None,
-              theta: float, window: int, budget: int | None):
+              theta: float, window: int, budget: int | None,
+              machine_rule: str = "earliest_finish"):
+    if machine_rule not in ONLINE_MACHINE_RULES:
+        raise ValueError(f"unknown machine_rule {machine_rule!r}")
     dur, allowed, pred, arrival, mask, power = _np_inst(inst)
     T, M = dur.shape
     real = mask.nonzero()[0]
@@ -79,8 +92,12 @@ def _simulate(inst: PackedInstance, intensity: np.ndarray | None,
                         if allowed[tk, m] and mfree[m] <= t]
                 if not free:
                     continue
-                m = min(free, key=lambda m: (dur[tk, m],
-                                             power[m] * dur[tk, m]))
+                if machine_rule == "min_energy":
+                    m = min(free, key=lambda m: (power[m] * dur[tk, m],
+                                                 dur[tk, m]))
+                else:
+                    m = min(free, key=lambda m: (dur[tk, m],
+                                                 power[m] * dur[tk, m]))
                 start[tk], assign[tk] = t, m
                 comp[tk] = t + dur[tk, m]
                 mfree[m] = comp[tk]
@@ -94,14 +111,17 @@ def _simulate(inst: PackedInstance, intensity: np.ndarray | None,
     return start, assign
 
 
-def online_greedy(inst: PackedInstance) -> tuple[np.ndarray, np.ndarray]:
+def online_greedy(inst: PackedInstance,
+                  machine_rule: str = "earliest_finish"
+                  ) -> tuple[np.ndarray, np.ndarray]:
     """Carbon-agnostic earliest-task-first (online makespan baseline)."""
-    return _simulate(inst, None, 0.0, 1, None)
+    return _simulate(inst, None, 0.0, 1, None, machine_rule=machine_rule)
 
 
 def online_carbon_gated(inst: PackedInstance, intensity: np.ndarray,
                         theta: float = 0.5, window: int = 96,
-                        stretch: float = 1.5, budget: int | None = None
+                        stretch: float = 1.5, budget: int | None = None,
+                        machine_rule: str = "earliest_finish"
                         ) -> tuple[np.ndarray, np.ndarray]:
     """Carbon-gated dispatch under an online makespan budget.
 
@@ -110,12 +130,16 @@ def online_carbon_gated(inst: PackedInstance, intensity: np.ndarray,
     the online analogue of the paper's S-constraint.  Pass ``budget``
     directly (``int(stretch * greedy_makespan)``) to skip the internal
     greedy run, e.g. when sweeping many policies over one instance.
+    ``machine_rule`` picks among free machines (see ONLINE_MACHINE_RULES);
+    the greedy budget run uses the same rule so the stretch cap is relative
+    to the rule's own baseline.
     """
     if budget is None:
-        s0, a0 = online_greedy(inst)
+        s0, a0 = online_greedy(inst, machine_rule=machine_rule)
         dur = np.asarray(inst.dur)
         mask = np.asarray(inst.task_mask)
         T = dur.shape[0]
         ms0 = int(max((s0[t] + dur[t, a0[t]]) for t in range(T) if mask[t]))
         budget = int(stretch * ms0)
-    return _simulate(inst, np.asarray(intensity), theta, window, budget)
+    return _simulate(inst, np.asarray(intensity), theta, window, budget,
+                     machine_rule=machine_rule)

@@ -144,9 +144,10 @@ def dirty_mask(intensity: jnp.ndarray, theta: jnp.ndarray,
     return _quantile_dirty(intensity, sv, n, theta)
 
 
-@functools.partial(jax.jit, static_argnames=("n_epochs",))
+@functools.partial(jax.jit, static_argnames=("n_epochs", "machine_rule"))
 def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
-                    budget: jnp.ndarray, n_epochs: int) -> OnlineSchedule:
+                    budget: jnp.ndarray, n_epochs: int,
+                    machine_rule: str = "earliest_finish") -> OnlineSchedule:
     """Run the event-driven dispatcher for epochs ``0 .. n_epochs - 2``.
 
     ``dirty[t]`` gates ready tasks at epoch ``t`` (all-False == greedy);
@@ -154,9 +155,14 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
     Semantics match ``online._simulate`` exactly: a task is dispatched at the
     first epoch where it has arrived, its predecessors have completed, the
     gate is open (or waiting would break the budget) and an allowed machine
-    is free — on the free machine minimizing ``(duration, power * duration,
-    index)`` lexicographically.
+    is free — on the free machine minimizing, lexicographically,
+    ``(duration, power * duration, index)`` under ``"earliest_finish"`` or
+    ``(power * duration, duration, index)`` under ``"min_energy"`` (the
+    ROADMAP's min-energy dispatch; both keys are exact in float32 for the
+    menu's quarter-kW powers, so numpy/JAX parity survives the dtype gap).
     """
+    if machine_rule not in ("earliest_finish", "min_energy"):
+        raise ValueError(f"unknown machine_rule {machine_rule!r}")
     T, M = inst.T, inst.M
     cp = downstream_critical_path(inst)
     preds = inst.pred & inst.task_mask[None, :]
@@ -183,10 +189,15 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
             tk = jnp.argmax(elig).astype(jnp.int32)  # lowest eligible index
             place = elig[tk]
             durs = inst.dur[tk]
-            dmin = jnp.min(jnp.where(free[tk], durs, BIG))
-            cand = free[tk] & (durs == dmin)
             cost = inst.power * durs.astype(jnp.float32)
-            m = jnp.argmin(jnp.where(cand, cost, jnp.inf)).astype(jnp.int32)
+            if machine_rule == "earliest_finish":
+                dmin = jnp.min(jnp.where(free[tk], durs, BIG))
+                cand = free[tk] & (durs == dmin)
+                m = jnp.argmin(jnp.where(cand, cost, jnp.inf)).astype(jnp.int32)
+            else:  # min_energy
+                cmin = jnp.min(jnp.where(free[tk], cost, jnp.inf))
+                cand = free[tk] & (cost == cmin)
+                m = jnp.argmin(jnp.where(cand, durs, BIG)).astype(jnp.int32)
             c = t + durs[m]
             return (scheduled.at[tk].set(scheduled[tk] | place),
                     comp.at[tk].set(jnp.where(place, c, comp[tk])),
@@ -217,28 +228,33 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
     return OnlineSchedule(start, assign, scheduled)
 
 
-def online_greedy_jax(inst: PackedInstance, n_epochs: int) -> OnlineSchedule:
+def online_greedy_jax(inst: PackedInstance, n_epochs: int,
+                      machine_rule: str = "earliest_finish") -> OnlineSchedule:
     """Carbon-agnostic baseline (gate always open) over a static horizon."""
     return simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
-                           n_epochs=n_epochs)
+                           n_epochs=n_epochs, machine_rule=machine_rule)
 
 
 def online_carbon_gated_jax(inst: PackedInstance, intensity,
                             theta: float = 0.5, window: int = 96,
-                            stretch: float = 1.5) -> OnlineSchedule:
+                            stretch: float = 1.5,
+                            machine_rule: str = "earliest_finish"
+                            ) -> OnlineSchedule:
     """Single-instance gated dispatch (mirrors ``online_carbon_gated``).
 
-    Runs the greedy baseline first to set ``budget = int(stretch * makespan)``,
-    then the gated simulation over the forecast horizon.
+    Runs the greedy baseline first to set ``budget = int(stretch * makespan)``
+    (same ``machine_rule``, so the budget is relative to the rule's own
+    baseline), then the gated simulation over the forecast horizon.
     """
     intensity = jnp.asarray(intensity)
     n_epochs = int(intensity.shape[0])
-    g = online_greedy_jax(inst, n_epochs)
+    g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
     ms0 = makespan(inst, g.start, g.assign)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
     dirty = dirty_mask(intensity, jnp.float32(theta), jnp.int32(window),
                        max_window=int(window))
-    return simulate_online(inst, dirty, budget, n_epochs=n_epochs)
+    return simulate_online(inst, dirty, budget, n_epochs=n_epochs,
+                           machine_rule=machine_rule)
 
 
 def policy_grid(thetas: Sequence[float], windows: Sequence[int],
@@ -252,13 +268,15 @@ def policy_grid(thetas: Sequence[float], windows: Sequence[int],
             jnp.asarray(sx.ravel()))
 
 
-@functools.partial(jax.jit, static_argnames=("n_epochs", "max_window"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_epochs", "max_window", "machine_rule"))
 def _sweep(batch: PackedInstance, intensity: jnp.ndarray,
            thetas: jnp.ndarray, windows: jnp.ndarray, stretches: jnp.ndarray,
-           n_epochs: int, max_window: int) -> SweepResult:
+           n_epochs: int, max_window: int,
+           machine_rule: str = "earliest_finish") -> SweepResult:
     def per_instance(inst, inten):
         g = simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
-                            n_epochs=n_epochs)
+                            n_epochs=n_epochs, machine_rule=machine_rule)
         ms0 = makespan(inst, g.start, g.assign)
 
         # window is the expensive axis (the masked sort); keep it outermost
@@ -272,7 +290,8 @@ def _sweep(batch: PackedInstance, intensity: jnp.ndarray,
                 def per_stretch(sx):
                     budget = (sx * ms0.astype(jnp.float32)).astype(jnp.int32)
                     return simulate_online(inst, dirty, budget,
-                                           n_epochs=n_epochs), budget
+                                           n_epochs=n_epochs,
+                                           machine_rule=machine_rule), budget
 
                 return jax.vmap(per_stretch)(stretches)
 
@@ -291,7 +310,8 @@ def _sweep(batch: PackedInstance, intensity: jnp.ndarray,
 
 
 def sweep_policies(batch: PackedInstance, intensity, thetas, windows,
-                   stretches) -> SweepResult:
+                   stretches,
+                   machine_rule: str = "earliest_finish") -> SweepResult:
     """Batched instances x policy grid, one XLA program.
 
     ``batch``: stacked instances [B, ...]; ``intensity``: per-instance
@@ -309,4 +329,4 @@ def sweep_policies(batch: PackedInstance, intensity, thetas, windows,
                   jnp.asarray(thetas, jnp.float32), jnp.asarray(windows),
                   jnp.asarray(stretches, jnp.float32),
                   n_epochs=int(intensity.shape[-1]),
-                  max_window=int(windows.max()))
+                  max_window=int(windows.max()), machine_rule=machine_rule)

@@ -1,0 +1,62 @@
+"""Carbon-forecast subsystem: imperfect forecasts + rolling re-quantiles.
+
+Why this package exists
+-----------------------
+The paper's 25% carbon-savings figure is an *offline upper bound*, computed
+against a perfect day-ahead carbon trace.  Everything between that bound and
+a deployable scheduler is forecast error.  This package makes forecast
+quality a first-class scenario axis: it generates calibrated imperfect
+forecasts over any carbon trace, rolls them forward MPC-style, and feeds
+them to the online gate (:mod:`repro.forecast.rolling`) and the rolling
+replanner (:mod:`repro.core.solvers.rolling`) so the repo can quantify how
+much of the offline bound survives at a given forecast quality.
+
+Lead-time conventions
+---------------------
+* Time is the repo-standard 15-minute epoch grid; ``truth`` is the realized
+  intensity, float32 ``[E]``.
+* A forecast *issued at* epoch ``t0`` spans **absolute** epochs ``0..E-1``.
+  The **lead** of epoch ``e`` is ``l = e - t0``.
+* Leads ``l <= 0`` are the *observed prefix*: real-time telemetry plus
+  history, equal to ``truth`` exactly.  In particular the current epoch
+  (lead 0) is always known — the online gate compares *observed* intensity
+  against *forecast* quantile thresholds.
+* Per-lead error is calibrated to ``std(l) = scale * std(truth) *
+  sqrt(1 - rho^(2l))`` — zero at lead 0, saturating at ``scale`` trace-stds
+  for day-ahead leads.  ``scale = 0`` is the perfect oracle, *bit-exact*
+  equal to ``truth``, which is the regression anchor: every rolling result
+  at ``scale = 0`` must reproduce the day-ahead perfect-forecast result.
+
+Quantile conventions
+--------------------
+* Gate thresholds are ``theta``-quantiles over the forecast window
+  ``point[t : t + window]``, computed with the same masked-sort +
+  ``np.quantile``-compatible interpolation as the day-ahead gate
+  (:mod:`repro.core.solvers.online_jax`), so perfect-forecast results agree
+  to the bit.
+* A forecast's own uncertainty is exposed as Gaussian per-lead bands:
+  :func:`repro.forecast.models.lead_quantiles` returns
+  ``point + ndtri(q) * std(lead)``, clamped at 0.  Quantile levels ``q`` are
+  probabilities in (0, 1); rows are returned in the caller's order.
+* Rolling re-quantile: replan boundaries sit at multiples of ``every``;
+  epoch ``t`` is gated by the forecast issued at ``(t // every) * every``.
+  Error seeds fold the issue index (``jax.random.fold_in(key, k)``), so
+  issues are independent draws while leads within one issue stay
+  AR(1)-correlated.
+
+Everything is shape-static jnp and ``vmap``s over (instances x error seeds x
+policy/robustness grids); see ``benchmarks/forecast_robustness.py`` for the
+full sweep.
+"""
+from repro.forecast.models import (AR1_RHO, EPOCHS_PER_DAY, Forecast, MODELS,
+                                   error_std_per_lead, issue, lead_quantiles)
+from repro.forecast.rolling import (day_ahead_dirty_mask, n_replans,
+                                    online_rolling_gated_jax,
+                                    rolling_dirty_mask)
+
+__all__ = [
+    "AR1_RHO", "EPOCHS_PER_DAY", "Forecast", "MODELS",
+    "error_std_per_lead", "issue", "lead_quantiles",
+    "day_ahead_dirty_mask", "n_replans", "online_rolling_gated_jax",
+    "rolling_dirty_mask",
+]

@@ -1,0 +1,118 @@
+"""Rolling re-quantile carbon gate: re-issue the forecast, re-gate dispatch.
+
+The day-ahead online gate (:mod:`repro.core.solvers.online_jax`) fixes its
+quantile thresholds once, from the forecast available at epoch 0.  Under
+forecast error that is exactly where the offline bound is lost: a threshold
+computed from a stale day-ahead forecast keeps gating against valleys that
+never materialize.  This module replaces it with the rolling scheme: every
+``every`` epochs the forecast is re-issued for the *remaining* horizon
+(:func:`repro.forecast.models.issue` at the new ``t0``) and the
+``theta``-quantile gate thresholds are recomputed from it — short leads, small
+errors, fresh thresholds.
+
+Everything is one ``lax.scan`` over the (static) replan boundaries, built on
+the same masked-sort + interpolated-quantile kernels the day-ahead gate uses
+(``_sorted_windows`` / ``_quantile_dirty``), so a **zero-noise rolling
+forecast reproduces the day-ahead gate bit-exactly** — the regression the
+tests lock.  The dirty decision at epoch ``t`` compares the *observed*
+intensity ``truth[t]`` (real-time telemetry) against the quantile of the
+*forecast* window ``point[t : t + window]`` from the most recent issue.
+
+``vmap`` axes: instances (each with its own truth window) x error seeds x the
+``(scale, every)`` robustness grid the benchmark sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.objectives import makespan
+from repro.core.solvers.online_jax import (OnlineSchedule, _quantile_dirty,
+                                           _sorted_windows, online_greedy_jax,
+                                           simulate_online)
+from repro.forecast import models
+
+
+def n_replans(n_epochs: int, every: int) -> int:
+    """Number of forecast issues covering ``n_epochs`` at one per ``every``."""
+    if every <= 0:
+        raise ValueError(f"replan interval must be positive, got {every}")
+    return -(-n_epochs // every)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "every", "max_window"))
+def rolling_dirty_mask(truth: jnp.ndarray, theta: jnp.ndarray,
+                       window: jnp.ndarray, key: jax.Array,
+                       scale: jnp.ndarray, every: int, max_window: int,
+                       model: str = "oracle_ar1",
+                       rho: float = models.AR1_RHO) -> jnp.ndarray:
+    """``dirty[t]`` under rolling re-quantile (see module docstring).
+
+    Epoch ``t`` is governed by the forecast issued at ``(t // every) * every``
+    (error seed ``fold_in(key, k)`` for issue ``k``, so successive issues are
+    independent draws while leads within one issue stay AR(1)-correlated).
+    ``every`` and ``max_window`` are static; ``theta``/``window``/``scale``
+    are traced, so robustness grids vmap over them without recompiling.
+    """
+    truth = jnp.asarray(truth, jnp.float32)
+    E = truth.shape[0]
+    K = n_replans(E, every)
+
+    def one_issue(_, k):
+        fc = models.issue(truth, jnp.int32(k * every),
+                          key=jax.random.fold_in(key, k),
+                          model=model, scale=scale, rho=rho)
+        sv, n = _sorted_windows(fc.point, window, max_window)
+        return None, _quantile_dirty(truth, sv, n, theta)
+
+    _, rows = jax.lax.scan(one_issue, None, jnp.arange(K, dtype=jnp.int32))
+    e = jnp.arange(E, dtype=jnp.int32)
+    return rows[e // every, e]
+
+
+@functools.partial(jax.jit, static_argnames=("model", "max_window"))
+def day_ahead_dirty_mask(truth: jnp.ndarray, theta: jnp.ndarray,
+                         window: jnp.ndarray, key: jax.Array,
+                         scale: jnp.ndarray, max_window: int,
+                         model: str = "oracle_ar1",
+                         rho: float = models.AR1_RHO) -> jnp.ndarray:
+    """The day-ahead-only gate under an *imperfect* forecast.
+
+    One forecast issued at epoch 0 fixes every threshold — the degenerate
+    ``every >= E`` case of :func:`rolling_dirty_mask`, and with ``scale = 0``
+    exactly :func:`repro.core.solvers.online_jax.dirty_mask` on ``truth``.
+    """
+    truth = jnp.asarray(truth, jnp.float32)
+    fc = models.issue(truth, jnp.int32(0), key=jax.random.fold_in(key, 0),
+                      model=model, scale=scale, rho=rho)
+    sv, n = _sorted_windows(fc.point, window, max_window)
+    return _quantile_dirty(truth, sv, n, theta)
+
+
+def online_rolling_gated_jax(inst: PackedInstance, truth, key: jax.Array,
+                             theta: float = 0.5, window: int = 96,
+                             stretch: float = 1.5, every: int = 48,
+                             scale: float = 1.0, model: str = "oracle_ar1",
+                             machine_rule: str = "earliest_finish"
+                             ) -> OnlineSchedule:
+    """Gated online dispatch with rolling re-quantile thresholds.
+
+    Mirrors :func:`~repro.core.solvers.online_jax.online_carbon_gated_jax`
+    (greedy run fixes the stretch budget, then the gated simulation), with
+    the day-ahead dirty mask swapped for the rolling one.  ``scale = 0``
+    reproduces the day-ahead dispatcher bit-exactly for every ``every``.
+    """
+    truth = jnp.asarray(truth, jnp.float32)
+    n_epochs = int(truth.shape[0])
+    g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+    ms0 = makespan(inst, g.start, g.assign)
+    budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
+    dirty = rolling_dirty_mask(truth, jnp.float32(theta), jnp.int32(window),
+                               key, jnp.float32(scale), every=every,
+                               max_window=int(window), model=model)
+    return simulate_online(inst, dirty, budget, n_epochs=n_epochs,
+                           machine_rule=machine_rule)

@@ -6,9 +6,18 @@ library; when it is absent, a minimal stand-in is injected into
 ``sys.modules`` before test modules import it, and every ``@given`` test
 skips at call time with a clear reason instead of failing collection.
 
+When the real library is present, two settings profiles are registered:
+``dev`` (fast local runs) and ``ci`` (raised ``max_examples``, per ROADMAP's
+property-test-depth item).  ``ci`` loads automatically when the ``CI`` env
+var is set (GitHub Actions exports it); ``HYPOTHESIS_PROFILE`` overrides.
+Tests that pin ``max_examples`` explicitly (the derandomized exact-equality
+suites) keep their pinned budget; profile defaults fill the rest.
+
 NOTE: no XLA_FLAGS here — smoke tests and benches must see the real single
 CPU device; only launch/dryrun.py forces 512.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -16,6 +25,13 @@ import jax
 
 try:
     import hypothesis  # noqa: F401
+
+    hypothesis.settings.register_profile(
+        "dev", max_examples=20, deadline=None)
+    hypothesis.settings.register_profile(
+        "ci", max_examples=75, deadline=None)
+    hypothesis.settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
 except ModuleNotFoundError:
     import sys
     import types

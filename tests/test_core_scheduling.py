@@ -57,7 +57,7 @@ def test_hetero_durations_scale(rng):
 # Feasibility properties of the decoders (hypothesis).
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
+@settings(deadline=None)
 @given(seed=st.integers(0, 10_000), k=st.integers(2, 5),
        n=st.integers(2, 5), rule=st.sampled_from(
            ["earliest_finish", "min_energy", "fixed"]))
@@ -73,7 +73,7 @@ def test_sgs_always_feasible(seed, k, n, rule):
     assert not check_feasible_np(p, dec.start, dec.assign)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_timing_sweep_feasible_and_monotone(seed):
     rng = np.random.default_rng(seed)
@@ -91,7 +91,7 @@ def test_timing_sweep_feasible_and_monotone(seed):
     assert float(carbon(p, start2, dec.assign, cum)) <= float(c0) + 1e-3
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(seed=st.integers(0, 10_000), slack=st.integers(0, 40))
 def test_timing_sweep_docstring_invariants(seed, slack):
     """What the timing_sweep docstring promises: carbon is monotone

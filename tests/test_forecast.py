@@ -1,0 +1,191 @@
+"""Forecast subsystem: model invariants + rolling re-quantile regression.
+
+The acceptance anchor is *bit-exactness*: a zero-noise rolling forecast must
+reproduce the day-ahead ``online_jax`` dispatch exactly, for every replan
+interval — locked here on fixed seeds (and widened by hypothesis when it is
+installed).  The second anchor is *monotonicity*: on fixed seeds, realized
+carbon of the rolling gate never improves as forecast error grows.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generate_instance, pack, synthesize, validate
+from repro.core.carbon import sample_window
+from repro.core.instance import DAG_SHAPES
+from repro.core.objectives import evaluate
+from repro.core.solvers.online_jax import (dirty_mask,
+                                           online_carbon_gated_jax)
+from repro.forecast import (AR1_RHO, issue, lead_quantiles, n_replans,
+                            online_rolling_gated_jax, rolling_dirty_mask,
+                            day_ahead_dirty_mask)
+
+HORIZON = 700
+
+
+def _case(seed, shape=None, hetero=False, n_jobs=4, k_tasks=3, n_machines=3):
+    rng = np.random.default_rng(seed)
+    inst = generate_instance(rng, n_jobs=n_jobs, k_tasks=k_tasks,
+                             n_machines=n_machines, heterogeneous=hetero,
+                             shape=shape)
+    p = pack(inst)
+    w = sample_window(synthesize("AU-SA", days=10), rng, HORIZON)
+    return p, jnp.asarray(w.intensity)
+
+
+# ---------------------------------------------------------------------------
+# Forecast model invariants.
+# ---------------------------------------------------------------------------
+
+def test_observed_prefix_and_lead0_exact():
+    _, truth = _case(0)
+    key = jax.random.key(3)
+    for model in ("oracle_ar1", "persistence", "diurnal"):
+        fc = issue(truth, jnp.int32(150), key=key, model=model, scale=1.0)
+        np.testing.assert_array_equal(np.asarray(fc.point)[:151],
+                                      np.asarray(truth)[:151])
+        assert float(fc.std[150]) == 0.0
+        assert float(fc.std[250]) > 0.0
+
+
+def test_error_std_saturating_monotone():
+    _, truth = _case(1)
+    fc = issue(truth, jnp.int32(50), key=jax.random.key(0), scale=0.8)
+    std = np.asarray(fc.std)
+    assert (np.diff(std[50:]) >= -1e-6).all()        # non-decreasing in lead
+    assert std[-1] <= 0.8 * float(jnp.std(truth)) + 1e-4  # saturates at scale
+
+
+def test_zero_scale_is_oracle_bitexact():
+    _, truth = _case(2)
+    for model in ("oracle_ar1", "persistence", "diurnal"):
+        fc = issue(truth, jnp.int32(0), key=jax.random.key(1), model=model,
+                   scale=0.0)
+        if model == "oracle_ar1":
+            np.testing.assert_array_equal(np.asarray(fc.point),
+                                          np.asarray(truth))
+        assert float(fc.std.max()) == 0.0
+
+
+def test_quantiles_ordered_and_collapse_on_prefix():
+    _, truth = _case(3)
+    fc = issue(truth, jnp.int32(100), key=jax.random.key(2), scale=1.0)
+    q = np.asarray(lead_quantiles(fc, (0.1, 0.5, 0.9)))
+    assert q.shape == (3, HORIZON)
+    assert (q[0] <= q[1] + 1e-5).all() and (q[1] <= q[2] + 1e-5).all()
+    np.testing.assert_allclose(q[:, :101],
+                               np.broadcast_to(np.asarray(truth)[:101],
+                                               (3, 101)), rtol=1e-6)
+
+
+def test_diurnal_exact_on_periodic_trace():
+    """A perfectly 96-periodic trace makes the seasonal-naive model exact."""
+    day = np.abs(np.sin(np.arange(96) / 96 * 2 * np.pi)) * 100 + 50
+    truth = jnp.asarray(np.tile(day, 6), jnp.float32)
+    fc = issue(truth, jnp.int32(100), model="diurnal", scale=1.0)
+    np.testing.assert_array_equal(np.asarray(fc.point), np.asarray(truth))
+
+
+def test_persistence_flat_after_issue():
+    _, truth = _case(4)
+    t0 = 123
+    fc = issue(truth, jnp.int32(t0), model="persistence", scale=1.0)
+    pt = np.asarray(fc.point)
+    assert (pt[t0:] == pt[t0]).all()
+    assert pt[t0] == float(truth[t0])
+
+
+def test_n_replans():
+    assert n_replans(512, 96) == 6
+    assert n_replans(96, 96) == 1
+    assert n_replans(97, 96) == 2
+    with pytest.raises(ValueError):
+        n_replans(96, 0)
+
+
+# ---------------------------------------------------------------------------
+# Zero-noise rolling == day-ahead, bit-exact (the acceptance regression).
+# ---------------------------------------------------------------------------
+
+def _assert_zero_noise_bitexact(p, truth, theta, window, stretch, every):
+    key = jax.random.key(11)
+    d0 = dirty_mask(truth, jnp.float32(theta), jnp.int32(window),
+                    max_window=window)
+    dr = rolling_dirty_mask(truth, jnp.float32(theta), jnp.int32(window),
+                            key, jnp.float32(0.0), every=every,
+                            max_window=window)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(dr))
+    da = day_ahead_dirty_mask(truth, jnp.float32(theta), jnp.int32(window),
+                              key, jnp.float32(0.0), max_window=window)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(da))
+
+    c = online_carbon_gated_jax(p, truth, theta=theta, window=window,
+                                stretch=stretch)
+    r = online_rolling_gated_jax(p, truth, key, theta=theta, window=window,
+                                 stretch=stretch, every=every, scale=0.0)
+    np.testing.assert_array_equal(np.asarray(c.start), np.asarray(r.start))
+    np.testing.assert_array_equal(np.asarray(c.assign), np.asarray(r.assign))
+    assert int(validate.total_violations(p, r.start, r.assign)) == 0
+
+
+@pytest.mark.parametrize("every", [24, 48, 96])
+@pytest.mark.parametrize("seed,shape,hetero", [(0, "chain", False),
+                                               (1, "fanout", True)])
+def test_zero_noise_rolling_matches_day_ahead_fixed(seed, shape, hetero,
+                                                    every):
+    p, truth = _case(seed, shape, hetero)
+    _assert_zero_noise_bitexact(p, truth, 0.4, 96, 1.5, every)
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), shape=st.sampled_from(DAG_SHAPES),
+       hetero=st.booleans(), theta=st.sampled_from([0.25, 0.3, 0.5, 0.75]),
+       window=st.sampled_from([24, 48, 96]),
+       stretch=st.sampled_from([1.25, 1.5, 2.0]),
+       every=st.sampled_from([16, 24, 48, 96, 200]))
+def test_zero_noise_rolling_matches_day_ahead_property(seed, shape, hetero,
+                                                       theta, window,
+                                                       stretch, every):
+    p, truth = _case(seed, shape, hetero)
+    _assert_zero_noise_bitexact(p, truth, theta, window, stretch, every)
+
+
+# ---------------------------------------------------------------------------
+# Rolling gate behaviour under error.
+# ---------------------------------------------------------------------------
+
+def test_rolling_gate_schedules_feasible_under_noise():
+    p, truth = _case(5, n_jobs=5, k_tasks=3, n_machines=4)
+    for scale in (0.5, 1.5):
+        r = online_rolling_gated_jax(p, truth, jax.random.key(4), theta=0.3,
+                                     stretch=1.5, every=24, scale=scale)
+        assert bool(np.asarray(r.scheduled | ~p.task_mask).all())
+        assert int(validate.total_violations(p, r.start, r.assign)) == 0
+
+
+def test_realized_carbon_monotone_in_forecast_quality():
+    """On fixed seeds, worse forecasts never *reduce* realized carbon (mean
+    over instances x error seeds) for the rolling gate."""
+    rng = np.random.default_rng(0)
+    year = synthesize("AU-SA", days=30)
+    cases = []
+    for seed in range(4):
+        p, truth = _case(seed + 10, n_jobs=5, k_tasks=3, n_machines=4)
+        w = sample_window(year, rng, HORIZON)
+        cases.append((p, jnp.asarray(w.intensity),
+                      jnp.asarray(w.cumulative())))
+    keys = [jax.random.key(100 + s) for s in range(3)]
+    means = []
+    for scale in (0.0, 1.0, 2.5):
+        tot = []
+        for p, truth, cum in cases:
+            for key in keys:
+                r = online_rolling_gated_jax(p, truth, key, theta=0.3,
+                                             stretch=1.5, every=24,
+                                             scale=scale)
+                tot.append(float(evaluate(p, r.start, r.assign, cum).carbon))
+        means.append(np.mean(tot))
+    assert means[0] <= means[1] + 1e-6 <= means[2] + 2e-6, means

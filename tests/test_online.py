@@ -11,7 +11,7 @@ from repro.core.objectives import evaluate
 from repro.core.solvers.online import online_carbon_gated, online_greedy
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(seed=st.integers(0, 10_000), hetero=st.booleans())
 def test_online_schedules_feasible(seed, hetero):
     rng = np.random.default_rng(seed)

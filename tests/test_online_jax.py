@@ -37,28 +37,46 @@ def _case(seed, shape, hetero, n_jobs=4, k_tasks=3, n_machines=3):
     return p, w
 
 
-def _assert_equiv(p, w, theta, window, stretch):
-    s0, a0 = online_greedy(p)
-    g = online_greedy_jax(p, HORIZON)
+def _assert_equiv(p, w, theta, window, stretch,
+                  machine_rule="earliest_finish"):
+    s0, a0 = online_greedy(p, machine_rule=machine_rule)
+    g = online_greedy_jax(p, HORIZON, machine_rule=machine_rule)
     assert bool(np.asarray(g.scheduled | ~p.task_mask).all())
     np.testing.assert_array_equal(s0, np.asarray(g.start))
     np.testing.assert_array_equal(a0, np.asarray(g.assign))
 
     sg, ag = online_carbon_gated(p, w.intensity, theta=theta, window=window,
-                                 stretch=stretch)
+                                 stretch=stretch, machine_rule=machine_rule)
     c = online_carbon_gated_jax(p, w.intensity, theta=theta, window=window,
-                                stretch=stretch)
+                                stretch=stretch, machine_rule=machine_rule)
     np.testing.assert_array_equal(sg, np.asarray(c.start))
     np.testing.assert_array_equal(ag, np.asarray(c.assign))
     # and both are validator-clean (Eqs. 4-8)
     assert int(validate.total_violations(p, c.start, c.assign)) == 0
 
 
+@pytest.mark.parametrize("rule", ["earliest_finish", "min_energy"])
 @pytest.mark.parametrize("shape", DAG_SHAPES)
 @pytest.mark.parametrize("seed,hetero", [(0, False), (1, True)])
-def test_online_jax_matches_numpy_fixed_seeds(seed, shape, hetero):
+def test_online_jax_matches_numpy_fixed_seeds(seed, shape, hetero, rule):
     p, w = _case(seed, shape, hetero)
-    _assert_equiv(p, w, theta=0.4, window=96, stretch=1.5)
+    _assert_equiv(p, w, theta=0.4, window=96, stretch=1.5, machine_rule=rule)
+
+
+def test_min_energy_rule_saves_energy_on_hetero():
+    """Fixed-seed regression: min-energy dispatch picks the cheaper machine
+    per decision, which on these heterogeneous seeds yields lower total
+    energy than earliest-finish.  (Not a universal dominance — greedy
+    occupancy effects can invert it — so failures here after input changes
+    mean re-pin the seeds, not a dispatcher bug.)"""
+    from repro.core.objectives import energy
+    for seed in range(4):
+        p, _ = _case(seed, None, hetero=True, n_jobs=5, k_tasks=3,
+                     n_machines=5)
+        ge = online_greedy_jax(p, HORIZON, machine_rule="earliest_finish")
+        gm = online_greedy_jax(p, HORIZON, machine_rule="min_energy")
+        assert bool(np.asarray(gm.scheduled | ~p.task_mask).all())
+        assert float(energy(p, gm.assign)) <= float(energy(p, ge.assign)) + 1e-5
 
 
 # derandomize: exact (start, assign) equality is float-fragile only in the
@@ -71,11 +89,12 @@ def test_online_jax_matches_numpy_fixed_seeds(seed, shape, hetero):
        hetero=st.booleans(),
        theta=st.sampled_from([0.25, 0.3, 0.5, 0.75]),
        window=st.sampled_from([24, 48, 96]),
-       stretch=st.sampled_from([1.25, 1.5, 2.0]))
+       stretch=st.sampled_from([1.25, 1.5, 2.0]),
+       rule=st.sampled_from(["earliest_finish", "min_energy"]))
 def test_online_jax_matches_numpy_property(seed, shape, hetero, theta,
-                                           window, stretch):
+                                           window, stretch, rule):
     p, w = _case(seed, shape, hetero)
-    _assert_equiv(p, w, theta, window, stretch)
+    _assert_equiv(p, w, theta, window, stretch, machine_rule=rule)
 
 
 def test_critical_path_matches_numpy():

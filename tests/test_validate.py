@@ -116,7 +116,7 @@ def test_validator_is_jit_and_vmap_friendly(rng):
     assert v.shape == (4,) and int(np.asarray(v).sum()) == 0
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_jnp_and_numpy_paths_agree_on_random_schedules(seed):
     """total_violations == 0 exactly when check_feasible_np reports nothing,
@@ -134,7 +134,7 @@ def test_jnp_and_numpy_paths_agree_on_random_schedules(seed):
     assert jfeas == nfeas
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_every_produced_schedule_passes_validator(seed):
     """Decoded (SGS) and online-dispatched schedules are validator-clean."""
