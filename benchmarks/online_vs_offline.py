@@ -89,12 +89,11 @@ def run(instances: int = 16) -> list[dict]:
     assert (np.asarray(res.gated.scheduled) | ~mask[:, None, :]).all(), \
         "gated dispatch did not complete within SIM_HORIZON"
 
-    # Shared validator, jit path, over every schedule in the sweep.
-    v_greedy = jax.vmap(validate.total_violations)(
-        batch, res.greedy.start, res.greedy.assign)
-    v_gated = jax.vmap(lambda i, s, a: jax.vmap(
-        lambda s1, a1: validate.total_violations(i, s1, a1))(s, a))(
-        batch, res.gated.start, res.gated.assign)
+    # Shared validator, batched jit path, over every schedule in the sweep.
+    v_greedy = validate.total_violations_batch(batch, res.greedy.start,
+                                               res.greedy.assign)
+    v_gated = validate.total_violations_batch(batch, res.gated.start,
+                                              res.gated.assign)
     assert int(np.asarray(v_greedy).sum()) == 0
     assert int(np.asarray(v_gated).sum()) == 0
 

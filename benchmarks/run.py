@@ -14,7 +14,7 @@ import time
 
 from benchmarks import (fig4_makespan, fig5_stretch, fig6_regions,
                         fig7_carbon_vs_energy, online_vs_offline,
-                        table1a_servers, table1b_tasks)
+                        structure_sweep, table1a_servers, table1b_tasks)
 
 BENCHES = {
     "fig4": fig4_makespan.run,
@@ -24,6 +24,7 @@ BENCHES = {
     "table1a": table1a_servers.run,
     "table1b": table1b_tasks.run,
     "online": online_vs_offline.run,   # beyond-paper: price of online
+    "structure": structure_sweep.run_harness,  # savings vs DAG structure
 }
 
 

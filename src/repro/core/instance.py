@@ -92,9 +92,24 @@ class PackedInstance(NamedTuple):
 
     All tasks across all jobs are flattened to a single axis of length ``T``
     (static), topologically ordered (any predecessor index < successor index).
-    Padded tasks have ``task_mask == False``, zero duration on machine 0 and
-    no dependencies, so they are scheduled instantly and never affect the
-    objectives (which mask them out).
+
+    Padding contract (property-tested in ``tests/test_scenarios.py``):
+
+    * **Padded tasks** have ``task_mask == False``, zero duration on machine
+      0 and no dependencies, so they are scheduled instantly and never affect
+      the objectives (which mask them out).
+    * **Padded machines** (``pack(..., pad_machines=M)``) are appended after
+      the real machines with ``allowed == False`` for every task, ``INF_DUR``
+      processing times for real tasks and zero power.  No decoder or
+      dispatcher can ever select them (every machine choice masks on
+      ``allowed``), so padding the machine axis is *inert*: the padded and
+      unpadded dispatch of the same instance are bit-exact on the real tasks
+      (real machine indices are preserved — padding only appends columns).
+
+    Together the two axes let :func:`repro.scenarios.batching.pack_aligned`
+    stack *mixed-shape* instances (different DAG families, task counts and
+    fleet sizes) into one ``[B, ...]`` batch that ``online_jax``/``rolling``
+    and the SA/GA solvers vmap over unchanged.
     """
 
     dur: jnp.ndarray        # int32 [T, M]
@@ -107,20 +122,31 @@ class PackedInstance(NamedTuple):
 
     @property
     def T(self) -> int:  # noqa: N802 - matches the math.
-        return self.dur.shape[0]
+        return self.dur.shape[-2]   # trailing axes: valid for [B, ...] stacks
 
     @property
     def M(self) -> int:  # noqa: N802
-        return self.dur.shape[1]
+        return self.dur.shape[-1]
 
 
-def pack(inst: Instance, pad_tasks: int | None = None) -> PackedInstance:
-    """Pack an :class:`Instance` to fixed-shape arrays (optionally padded to
-    ``pad_tasks`` total tasks so instances of different sizes can be batched)."""
-    T_real, M = inst.n_tasks, inst.n_machines
+def pack(inst: Instance, pad_tasks: int | None = None,
+         pad_machines: int | None = None) -> PackedInstance:
+    """Pack an :class:`Instance` to fixed-shape arrays.
+
+    ``pad_tasks`` / ``pad_machines`` pad the task and machine axes so
+    instances of different sizes (task counts *and* fleet sizes) can be
+    stacked into one batch — see the padding contract on
+    :class:`PackedInstance`.  Padded machines are never ``allowed``, carry
+    ``INF_DUR`` durations for real tasks and zero power, so they are inert:
+    no dispatcher or decoder can place work on them.
+    """
+    T_real, M_real = inst.n_tasks, inst.n_machines
     T = pad_tasks or T_real
+    M = pad_machines or M_real
     if T < T_real:
         raise ValueError(f"pad_tasks={T} < real task count {T_real}")
+    if M < M_real:
+        raise ValueError(f"pad_machines={M} < real machine count {M_real}")
 
     dur = np.zeros((T, M), dtype=np.int32)
     allowed = np.zeros((T, M), dtype=bool)
@@ -128,10 +154,15 @@ def pack(inst: Instance, pad_tasks: int | None = None) -> PackedInstance:
     arrival = np.zeros((T,), dtype=np.int32)
     job_id = np.zeros((T,), dtype=np.int32)
     task_mask = np.zeros((T,), dtype=bool)
+    power = np.zeros((M,), dtype=np.float32)
+    power[:M_real] = np.asarray(inst.powers_kw, dtype=np.float32)
 
     dmat = inst.durations_matrix()
-    dur[:T_real] = dmat
-    allowed[:T_real] = dmat < INF_DUR
+    dur[:T_real, :M_real] = dmat
+    allowed[:T_real, :M_real] = dmat < INF_DUR
+    # Padded machine columns: disallowed, INF duration for real tasks
+    # (belt-and-braces — `allowed` already masks them out everywhere).
+    dur[:T_real, M_real:] = INF_DUR
     t0 = 0
     for ji, job in enumerate(inst.jobs):
         k = job.n_tasks
@@ -154,12 +185,25 @@ def pack(inst: Instance, pad_tasks: int | None = None) -> PackedInstance:
         arrival=jnp.asarray(arrival),
         job=jnp.asarray(job_id),
         task_mask=jnp.asarray(task_mask),
-        power=jnp.asarray(np.asarray(inst.powers_kw, dtype=np.float32)),
+        power=jnp.asarray(power),
     )
 
 
 def stack_packed(insts: Sequence[PackedInstance]) -> PackedInstance:
-    """Stack same-shape packed instances along a leading batch axis."""
+    """Stack same-shape packed instances along a leading batch axis.
+
+    Instances must share ``(T, M)`` — pack them with common ``pad_tasks`` /
+    ``pad_machines`` (or use :func:`repro.scenarios.batching.pack_aligned`,
+    which computes the common shape for you).
+    """
+    if not insts:
+        raise ValueError("stack_packed: empty instance sequence")
+    shapes = {(p.T, p.M) for p in insts}
+    if len(shapes) > 1:
+        raise ValueError(
+            "stack_packed: mixed (T, M) shapes "
+            f"{sorted(shapes)} — pack with common pad_tasks/pad_machines "
+            "(see repro.scenarios.batching.pack_aligned)")
     return PackedInstance(*(jnp.stack([getattr(p, f) for p in insts])
                             for f in PackedInstance._fields))
 

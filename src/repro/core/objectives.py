@@ -66,11 +66,21 @@ def evaluate(inst: PackedInstance, start: jnp.ndarray, assign: jnp.ndarray,
 
 def utilization(inst: PackedInstance, start: jnp.ndarray,
                 assign: jnp.ndarray) -> jnp.ndarray:
-    """Busy machine-epochs / (M * makespan) — the paper's utilization metric."""
+    """Busy machine-epochs / (usable machines * makespan).
+
+    The paper's utilization metric, with the denominator counting machines
+    *usable by at least one real task* rather than the raw array width — so
+    machine padding (``pack(..., pad_machines=...)``, whose padded columns
+    are never ``allowed``) leaves the metric bit-identical to the unpadded
+    instance.  For ordinary instances every machine serves some task and the
+    two denominators coincide.
+    """
     d = task_durations(inst, assign).astype(jnp.float32)
     busy = jnp.sum(jnp.where(inst.task_mask, d, 0.0))
     ms = makespan(inst, start, assign).astype(jnp.float32)
-    return busy / (inst.M * jnp.maximum(ms, 1.0))
+    usable = jnp.sum(jnp.any(inst.allowed & inst.task_mask[:, None],
+                             axis=0).astype(jnp.float32))
+    return busy / (jnp.maximum(usable, 1.0) * jnp.maximum(ms, 1.0))
 
 
 # Feasibility (Appendix A constraints, Eqs. 4-8) lives in repro.core.validate

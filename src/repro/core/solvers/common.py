@@ -11,6 +11,12 @@ through the validator means *any* constraint a decode path might miss (e.g.
 a frozen-prefix instance transform) is priced by the same source of truth
 the tests check.
 
+Padded instances (mixed-shape scenario batches from
+``repro.scenarios.batching``) decode unchanged: padded tasks schedule
+instantly at zero duration, padded machines are never ``allowed`` so
+neither SGS machine rules nor :func:`random_allowed_assign` can pick them,
+and both the objectives and the validator mask padding out.
+
 The paper's energy objective uses carbon as a tiny tie-break weight
 (Section 3.2, "Optimizing for energy usage vs carbon emissions") — we use
 1e-6 gCO2/kWh-scale weight, below the smallest energy quantum (one epoch of

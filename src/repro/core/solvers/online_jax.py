@@ -17,8 +17,12 @@ single compiled program with no host round-trips.  It ``vmap``s along two
 axes:
 
 * **instances** — stacked :class:`~repro.core.instance.PackedInstance`
-  batches from :func:`~repro.core.instance.stack_packed`, each with its own
-  carbon-intensity forecast window;
+  batches from :func:`~repro.core.instance.stack_packed` (or, for
+  mixed-shape scenario batches, :func:`repro.scenarios.batching.pack_aligned`
+  — task *and* machine padding are inert per the PackedInstance padding
+  contract: every machine choice below masks on ``allowed``, so padded
+  columns are unselectable and padded vs. unpadded dispatch is bit-exact on
+  the real tasks), each with its own carbon-intensity forecast window;
 * **policies** — a flat grid of gate knobs ``(theta, window, stretch)``
   (see :func:`policy_grid`), the online analogue of the paper's S-sweep.
 

@@ -9,7 +9,11 @@ the SA search on the remaining sub-DAG against the updated forecast — model
 predictive control with the paper's phase-2 search as the per-step
 controller.  The whole replan sequence is one ``lax.scan`` (one XLA
 program), and :func:`solve_mpc_batch` vmaps it over instances x forecast
-seeds.
+seeds — including mixed-shape scenario batches padded by
+:func:`repro.scenarios.batching.pack_aligned` (the freeze transform
+preserves the padding contract: padded tasks are never frozen because they
+never "start", and padded machines stay disallowed since ``_frozen_instance``
+only ever *shrinks* ``allowed`` for frozen real tasks).
 
 Freezing without changing the SGS decoder
 -----------------------------------------

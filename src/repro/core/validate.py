@@ -19,6 +19,9 @@ Two paths over the same semantics:
 * :func:`violation_report` / :func:`total_violations` — jnp, jit- and
   vmap-friendly, return integer violation *masses* (0 == feasible).  Used by
   solvers, decoders and batched benchmarks without host round-trips.
+  :func:`total_violations_batch` maps them over stacked (padded) instances
+  plus any number of per-instance sweep axes (policy grids, forecast seeds,
+  scenario cells) in one call.
 * :func:`check_feasible_np` / :func:`assert_feasible_np` — numpy/Python,
   return human-readable problem strings.  Used by tests and the oracles.
 
@@ -28,6 +31,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -116,6 +120,37 @@ def total_violations(inst: PackedInstance, start: jnp.ndarray,
     r = violation_report(inst, start, assign, deadline)
     return (r.arrival + r.precedence + r.machine * _MACHINE_WEIGHT
             + r.overlap + r.budget).astype(jnp.int32)
+
+
+def total_violations_batch(insts: PackedInstance, start, assign,
+                           deadline=None) -> jnp.ndarray:
+    """Batched feasibility over stacked (padded) instances.
+
+    ``insts`` carries a leading instance axis ``[B, ...]`` (from
+    :func:`repro.core.instance.stack_packed`); ``start``/``assign`` are
+    ``[B, *extra, T]`` where ``*extra`` are any per-instance sweep axes — a
+    gate-policy grid, forecast seeds, a scenario cell axis — broadcast
+    against their instance.  ``deadline`` (optional) broadcasts to
+    ``[B, *extra]``.  Returns int32 violation masses of shape
+    ``[B, *extra]``; all-zero == every schedule in the sweep is feasible.
+    Padded tasks and machines are ignored exactly as in
+    :func:`violation_report`.
+    """
+    start = jnp.asarray(start)
+    assign = jnp.asarray(assign)
+    n_extra = start.ndim - 2
+    if n_extra < 0:
+        raise ValueError(f"start must be at least [B, T], got {start.shape}")
+    if deadline is None:
+        fn = lambda i, s, a: total_violations(i, s, a)
+        for _ in range(n_extra):
+            fn = jax.vmap(fn, in_axes=(None, 0, 0))
+        return jax.vmap(fn)(insts, start, assign)
+    deadline = jnp.broadcast_to(jnp.asarray(deadline), start.shape[:-1])
+    fn = lambda i, s, a, d: total_violations(i, s, a, d)
+    for _ in range(n_extra):
+        fn = jax.vmap(fn, in_axes=(None, 0, 0, 0))
+    return jax.vmap(fn)(insts, start, assign, deadline)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,37 @@
+"""Parametric, seeded scenario generation for the DAG-scheduling repro.
+
+The paper evaluates a handful of hand-rolled Fig. 3 shapes; this package
+spans the structure space its sensitivity analysis names as decisive (job
+structure x server count) with first-class, seeded generators:
+
+    families   — parametric DAG families (chain, fanout, diamond/series-
+                 parallel, random layered, TPC-H-like query plans)
+    fleets     — machine-fleet generators (homogeneous, paper's 5-class
+                 tiers, randomly mixed tiers)
+    generator  — ScenarioConfig (one cell) -> seeded Instance sampling
+    batching   — pad mixed-shape instances to one stacked batch (inert
+                 padding on the task AND machine axes — see the padding
+                 contract on PackedInstance)
+    sweep      — the vectorized structure sweep (one XLA program over all
+                 cells x instances x gate policies + the offline SA bound)
+
+How to add a family or fleet: see the ``families`` / ``fleets`` module
+docstrings.  The padding contract and its property tests: ``batching`` and
+``tests/test_scenarios.py``.
+"""
+from repro.scenarios.batching import aligned_shape, pack_aligned
+from repro.scenarios.families import FAMILIES, FAMILY_NAMES, build_dag
+from repro.scenarios.fleets import FLEETS, FLEET_NAMES, build_fleet
+from repro.scenarios.generator import (ScenarioConfig, sample_batch,
+                                       sample_instance, sample_job)
+from repro.scenarios.sweep import (SweepSpec, build_batch, structure_cells,
+                                   sweep_structure, trend_summary)
+
+__all__ = [
+    "FAMILIES", "FAMILY_NAMES", "build_dag",
+    "FLEETS", "FLEET_NAMES", "build_fleet",
+    "ScenarioConfig", "sample_batch", "sample_instance", "sample_job",
+    "aligned_shape", "pack_aligned",
+    "SweepSpec", "build_batch", "structure_cells", "sweep_structure",
+    "trend_summary",
+]

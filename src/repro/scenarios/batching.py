@@ -1,0 +1,48 @@
+"""Shape-static batching of mixed-shape instances.
+
+Instances from different scenario cells differ in task count (families,
+widths, depths, job counts) *and* machine count (fleet sizes).  The JAX
+dispatchers and solvers vmap over a stacked
+:class:`~repro.core.instance.PackedInstance`, which requires one static
+``(T, M)`` — so this module pads every instance to the batch maximum on
+both axes and stacks:
+
+* task padding appends masked tasks (``task_mask == False``) that schedule
+  instantly and never touch the objectives;
+* machine padding appends never-``allowed`` zero-power machines that no
+  decoder can select.
+
+Both paddings are **inert**: dispatching the padded instance is bit-exact
+with the unpadded one on the real tasks (the padding contract on
+:class:`~repro.core.instance.PackedInstance`, property-tested across all
+families in ``tests/test_scenarios.py``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.instance import Instance, PackedInstance, pack, stack_packed
+
+
+def aligned_shape(instances: Sequence[Instance]) -> tuple[int, int]:
+    """The smallest common ``(pad_tasks, pad_machines)`` for a mixed batch."""
+    if not instances:
+        raise ValueError("aligned_shape: empty instance sequence")
+    return (max(i.n_tasks for i in instances),
+            max(i.n_machines for i in instances))
+
+
+def pack_aligned(instances: Sequence[Instance],
+                 pad_tasks: int | None = None,
+                 pad_machines: int | None = None) -> PackedInstance:
+    """Pack mixed-shape instances to one stacked ``[B, ...]`` batch.
+
+    ``pad_tasks`` / ``pad_machines`` override the computed maxima (e.g. to
+    align several independently built batches to one XLA program shape);
+    they must cover every instance.
+    """
+    T, M = aligned_shape(instances)
+    T = max(T, pad_tasks or 0)
+    M = max(M, pad_machines or 0)
+    return stack_packed([pack(i, pad_tasks=T, pad_machines=M)
+                         for i in instances])

@@ -1,0 +1,126 @@
+"""Shared hypothesis strategies + seeded case builders for the test suite.
+
+One home for "give me an instance" in tests, drawing from *every* scenario
+family and fleet (``repro.scenarios``) instead of the per-file ad-hoc
+builders this replaces: property tests across the suite now exercise
+chain / fanout / diamond / layered / tpch DAGs on homogeneous, tiered and
+mixed fleets.
+
+Two layers:
+
+* :func:`scenario_case` and friends — plain seeded builders (no hypothesis
+  needed), used by fixed-seed parametrized tests and inside ``@given``
+  bodies (the suite's property tests draw small ints/labels and build
+  deterministically from them, keeping shrinking effective and examples
+  reproducible as plain function calls).
+* strategies (``seeds``, ``family_names``, ``scenario_configs``,
+  ``instances``) — for tests that want hypothesis to draw whole objects.
+
+Import order: ``tests/conftest.py`` installs the hypothesis stub *before*
+test modules load, so importing ``hypothesis`` here is safe without the
+real dependency (strategies become inert placeholders and ``@given`` tests
+skip).
+
+Padding note: builders accept ``pad_tasks`` / ``pad_machines`` so a test
+module can pin ONE static shape across all its cases (one XLA compile per
+module instead of one per drawn size) — padding is inert by the
+PackedInstance contract, which ``tests/test_scenarios.py`` itself verifies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from hypothesis import strategies as st
+
+from repro.core import pack, synthesize
+from repro.core.carbon import CarbonTrace, sample_window
+from repro.core.instance import Instance, PackedInstance
+from repro.scenarios import (FAMILY_NAMES, FLEET_NAMES, ScenarioConfig,
+                             sample_instance)
+
+# Shared bounds for drawn scenario cells: small enough that every test
+# suite stays fast, wide enough to cover every family's structure.  (Test
+# modules that pin a static pad shape size it to their own largest case —
+# the diamond family is the driver at depth * (width + 2) tasks per job.)
+MAX_JOBS = 4
+MAX_WIDTH = 3
+MAX_DEPTH = 3
+MAX_MACHINES = 5
+
+
+def scenario_config(seed: int, family: str | None = None,
+                    fleet: str | None = None, n_jobs: int = 4,
+                    width: int = 2, depth: int = 2,
+                    n_machines: int = 3) -> ScenarioConfig:
+    """A concrete cell; ``family``/``fleet`` None == seeded random choice."""
+    rng = np.random.default_rng((seed, 0xC0FFEE))
+    if family is None:
+        family = FAMILY_NAMES[int(rng.integers(len(FAMILY_NAMES)))]
+    if fleet is None:
+        fleet = FLEET_NAMES[int(rng.integers(len(FLEET_NAMES)))]
+    return ScenarioConfig(family=family, fleet=fleet, n_jobs=n_jobs,
+                          width=width, depth=depth, n_machines=n_machines)
+
+
+def scenario_instance(seed: int, **kw) -> Instance:
+    """Deterministic instance from a seed (kwargs as scenario_config)."""
+    cfg = scenario_config(seed, **kw)
+    return sample_instance(np.random.default_rng(seed), cfg)
+
+
+def scenario_case(seed: int, family: str | None = None,
+                  fleet: str | None = None, n_jobs: int = 4, width: int = 2,
+                  depth: int = 2, n_machines: int = 3,
+                  pad_tasks: int | None = None,
+                  pad_machines: int | None = None, horizon: int = 700,
+                  region: str = "AU-SA"
+                  ) -> tuple[PackedInstance, CarbonTrace]:
+    """Deterministic (packed instance, carbon window) — the shared `_case`.
+
+    Equal arguments give bit-identical cases across processes; the carbon
+    window is drawn from the same seeded stream as the instance.
+    """
+    rng = np.random.default_rng(seed)
+    cfg = scenario_config(seed, family=family, fleet=fleet, n_jobs=n_jobs,
+                          width=width, depth=depth, n_machines=n_machines)
+    inst = sample_instance(rng, cfg)
+    p = pack(inst, pad_tasks=pad_tasks, pad_machines=pad_machines)
+    w = sample_window(synthesize(region, days=10), rng, horizon)
+    return p, w
+
+
+# ---------------------------------------------------------------------------
+# hypothesis strategies (inert under the conftest stub).
+# ---------------------------------------------------------------------------
+
+def seeds():
+    return st.integers(0, 10_000)
+
+
+def family_names():
+    return st.sampled_from(FAMILY_NAMES)
+
+
+def fleet_names():
+    return st.sampled_from(FLEET_NAMES)
+
+
+@st.composite
+def scenario_configs(draw, max_jobs: int = MAX_JOBS,
+                     max_width: int = MAX_WIDTH, max_depth: int = MAX_DEPTH,
+                     max_machines: int = MAX_MACHINES):
+    return ScenarioConfig(
+        family=draw(family_names()),
+        fleet=draw(fleet_names()),
+        n_jobs=draw(st.integers(1, max_jobs)),
+        width=draw(st.integers(1, max_width)),
+        depth=draw(st.integers(1, max_depth)),
+        n_machines=draw(st.integers(1, max_machines)))
+
+
+@st.composite
+def instances(draw, **kw):
+    """A whole Instance drawn via (config, seed) — shrinks toward tiny cells."""
+    cfg = draw(scenario_configs(**kw))
+    seed = draw(seeds())
+    return sample_instance(np.random.default_rng(seed), cfg)

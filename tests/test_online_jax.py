@@ -1,10 +1,16 @@
 """Batched JAX online dispatcher vs the sequential numpy oracle.
 
 The `online_jax` scan simulator must reproduce `online.py` *exactly* —
-same (start, assign) arrays — on every DAG shape, homogeneous and
-heterogeneous machine menus, and across the gate-policy grid.  Property
-tests (hypothesis) randomize; the parametrized tests pin fixed seeds so the
-equivalence is exercised even without hypothesis installed.
+same (start, assign) arrays — on every scenario DAG family (chain, fanout,
+diamond, layered, tpch), every fleet menu, and across the gate-policy grid.
+Cases come from the shared seeded builders in ``tests/strategies``
+(replacing this file's old ad-hoc ``_case``); everything is padded to ONE
+static (T, M) so the whole module reuses a single XLA program per
+dispatcher — padding is inert by the PackedInstance contract
+(property-tested in ``tests/test_scenarios.py``).
+
+Property tests (hypothesis) randomize; the parametrized tests pin fixed
+seeds so the equivalence is exercised even without hypothesis installed.
 """
 import numpy as np
 import pytest
@@ -13,28 +19,31 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.core import generate_instance, pack, stack_packed, synthesize, validate
-from repro.core.carbon import sample_window
-from repro.core.instance import DAG_SHAPES
+from repro.core import validate
 from repro.core.objectives import evaluate
+from repro.core.instance import stack_packed
 from repro.core.solvers.online import (_critical_path, online_carbon_gated,
                                        online_greedy)
 from repro.core.solvers.online_jax import (downstream_critical_path,
                                            dirty_mask, online_carbon_gated_jax,
                                            online_greedy_jax, policy_grid,
                                            sweep_policies)
+from repro.scenarios import FAMILY_NAMES, FLEET_NAMES
+from tests.strategies import scenario_case, family_names, fleet_names, seeds
 
 HORIZON = 700
+# One static shape for every case in this module (largest draw: diamond at
+# width 2 / depth 3 x 5 jobs in the min-energy test = 60 tasks).
+PAD_T, PAD_M = 64, 5
 
 
-def _case(seed, shape, hetero, n_jobs=4, k_tasks=3, n_machines=3):
-    rng = np.random.default_rng(seed)
-    inst = generate_instance(rng, n_jobs=n_jobs, k_tasks=k_tasks,
-                             n_machines=n_machines, heterogeneous=hetero,
-                             shape=shape)
-    p = pack(inst)
-    w = sample_window(synthesize("AU-SA", days=10), rng, HORIZON)
-    return p, w
+def _case(seed, family=None, fleet=None, **kw):
+    kw.setdefault("n_jobs", 4)
+    kw.setdefault("width", 2)
+    kw.setdefault("depth", 2)
+    kw.setdefault("n_machines", 3)
+    return scenario_case(seed, family=family, fleet=fleet, horizon=HORIZON,
+                         pad_tasks=PAD_T, pad_machines=PAD_M, **kw)
 
 
 def _assert_equiv(p, w, theta, window, stretch,
@@ -56,10 +65,10 @@ def _assert_equiv(p, w, theta, window, stretch,
 
 
 @pytest.mark.parametrize("rule", ["earliest_finish", "min_energy"])
-@pytest.mark.parametrize("shape", DAG_SHAPES)
-@pytest.mark.parametrize("seed,hetero", [(0, False), (1, True)])
-def test_online_jax_matches_numpy_fixed_seeds(seed, shape, hetero, rule):
-    p, w = _case(seed, shape, hetero)
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+@pytest.mark.parametrize("seed,fleet", [(0, "homog"), (1, "tiered")])
+def test_online_jax_matches_numpy_fixed_seeds(seed, family, fleet, rule):
+    p, w = _case(seed, family, fleet)
     _assert_equiv(p, w, theta=0.4, window=96, stretch=1.5, machine_rule=rule)
 
 
@@ -71,7 +80,7 @@ def test_min_energy_rule_saves_energy_on_hetero():
     mean re-pin the seeds, not a dispatcher bug.)"""
     from repro.core.objectives import energy
     for seed in range(4):
-        p, _ = _case(seed, None, hetero=True, n_jobs=5, k_tasks=3,
+        p, _ = _case(seed, None, fleet="tiered", n_jobs=5, depth=3,
                      n_machines=5)
         ge = online_greedy_jax(p, HORIZON, machine_rule="earliest_finish")
         gm = online_greedy_jax(p, HORIZON, machine_rule="min_energy")
@@ -84,22 +93,23 @@ def test_min_energy_rule_saves_energy_on_hetero():
 # the float64 np.quantile threshold — a fixed example set keeps the property
 # meaningful without that band ever flaking CI on a fresh random seed.
 @settings(max_examples=25, deadline=None, derandomize=True)
-@given(seed=st.integers(0, 10_000),
-       shape=st.sampled_from(DAG_SHAPES),
-       hetero=st.booleans(),
+@given(seed=seeds(),
+       family=family_names(),
+       fleet=fleet_names(),
        theta=st.sampled_from([0.25, 0.3, 0.5, 0.75]),
        window=st.sampled_from([24, 48, 96]),
        stretch=st.sampled_from([1.25, 1.5, 2.0]),
        rule=st.sampled_from(["earliest_finish", "min_energy"]))
-def test_online_jax_matches_numpy_property(seed, shape, hetero, theta,
+def test_online_jax_matches_numpy_property(seed, family, fleet, theta,
                                            window, stretch, rule):
-    p, w = _case(seed, shape, hetero)
+    p, w = _case(seed, family, fleet)
     _assert_equiv(p, w, theta, window, stretch, machine_rule=rule)
 
 
 def test_critical_path_matches_numpy():
     for seed in range(5):
-        p, _ = _case(seed, DAG_SHAPES[seed % 3], bool(seed % 2))
+        p, _ = _case(seed, FAMILY_NAMES[seed % len(FAMILY_NAMES)],
+                     FLEET_NAMES[seed % len(FLEET_NAMES)])
         dur = np.asarray(p.dur)
         cp_np = _critical_path(dur, np.asarray(p.allowed), np.asarray(p.pred),
                                np.asarray(p.task_mask))
@@ -108,6 +118,8 @@ def test_critical_path_matches_numpy():
 
 
 def test_dirty_mask_matches_np_quantile():
+    from repro.core import synthesize
+    from repro.core.carbon import sample_window
     rng = np.random.default_rng(3)
     w = sample_window(synthesize("CAL", days=10), rng, 300)
     inten = w.intensity
@@ -127,8 +139,8 @@ def test_dirty_mask_matches_np_quantile():
 def test_sweep_matches_single_instance_calls():
     packs, intens = [], []
     for seed in range(3):
-        p, w = _case(seed, DAG_SHAPES[seed], hetero=bool(seed % 2),
-                     n_jobs=3, k_tasks=3)
+        p, w = _case(seed, FAMILY_NAMES[seed], FLEET_NAMES[seed % 3],
+                     n_jobs=3)
         packs.append(p)
         intens.append(w.intensity)
     batch = stack_packed(packs)
@@ -155,10 +167,10 @@ def test_sweep_matches_single_instance_calls():
 
 
 def test_gated_jax_saves_carbon_and_respects_stretch():
-    rng = np.random.default_rng(5)
     savings = []
     for seed in range(3):
-        p, w = _case(seed, None, False, n_jobs=6, k_tasks=4, n_machines=5)
+        p, w = _case(seed, "layered", "homog", n_jobs=6, width=3,
+                     n_machines=5)
         cum = jnp.asarray(w.cumulative())
         g = online_greedy_jax(p, HORIZON)
         c = online_carbon_gated_jax(p, w.intensity, theta=0.4, stretch=1.5)

@@ -5,6 +5,11 @@ executing under the incumbent plan, no later replan may move or migrate it.
 Checked across the per-replan plan history the solver returns.  With a
 perfect forecast (scale = 0) the incumbent-fallback guard additionally
 guarantees realized carbon never exceeds the day-ahead baseline plan's.
+
+Cases come from the shared scenario builders in ``tests/strategies``
+(chain/fanout/diamond/layered/tpch DAGs on every fleet menu), all padded to
+ONE static (T, M) — including padded *machines* for the small fleets — so
+the whole module reuses a single XLA program.
 """
 import numpy as np
 import pytest
@@ -13,14 +18,16 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.core import generate_instance, pack, synthesize, validate
-from repro.core.carbon import sample_window
+from repro.core import validate
 from repro.core.solvers.annealing import SAConfig
 from repro.core.solvers.rolling import (MPCConfig, forecast_cum, solve_mpc,
                                         solve_mpc_batch)
 from repro.core.instance import stack_packed
+from tests.strategies import scenario_case, family_names, fleet_names, seeds
 
 HORIZON = 320
+# One static shape for every case (largest: diamond w2 d2 x 3 jobs = 24).
+PAD_T, PAD_M = 24, 4
 
 # One shared config so every test in the module reuses the same XLA program.
 CFG = MPCConfig(every=24, n_replans=5, stretch=1.5,
@@ -28,12 +35,10 @@ CFG = MPCConfig(every=24, n_replans=5, stretch=1.5,
                 sa_phase1=SAConfig(pop=24, iters=40))
 
 
-def _case(seed, n_jobs=4, k_tasks=3, n_machines=4, hetero=False):
-    rng = np.random.default_rng(seed)
-    inst = generate_instance(rng, n_jobs=n_jobs, k_tasks=k_tasks,
-                             n_machines=n_machines, heterogeneous=hetero)
-    p = pack(inst, pad_tasks=n_jobs * k_tasks)
-    w = sample_window(synthesize("AU-SA", days=10), rng, HORIZON)
+def _case(seed, family=None, fleet=None):
+    p, w = scenario_case(seed, family=family, fleet=fleet, n_jobs=3,
+                         width=2, depth=2, n_machines=3, horizon=HORIZON,
+                         pad_tasks=PAD_T, pad_machines=PAD_M)
     return p, jnp.asarray(w.intensity), jnp.asarray(w.cumulative())
 
 
@@ -62,20 +67,20 @@ def _assert_invariants(p, res, every):
     np.testing.assert_array_equal(assign, pa[-1])
 
 
-@pytest.mark.parametrize("seed,hetero,scale", [(0, False, 0.0),
-                                               (1, True, 0.8),
-                                               (2, False, 1.5)])
-def test_mpc_frozen_prefix_and_feasibility_fixed(seed, hetero, scale):
-    p, truth, cum = _case(seed, hetero=hetero)
+@pytest.mark.parametrize("seed,fleet,scale", [(0, "homog", 0.0),
+                                              (1, "tiered", 0.8),
+                                              (2, "mixed", 1.5)])
+def test_mpc_frozen_prefix_and_feasibility_fixed(seed, fleet, scale):
+    p, truth, cum = _case(seed, fleet=fleet)
     res = _solve(p, truth, cum, seed, scale)
     _assert_invariants(p, res, CFG.every)
 
 
 @settings(max_examples=10, deadline=None, derandomize=True)
-@given(seed=st.integers(0, 10_000), hetero=st.booleans(),
+@given(seed=seeds(), family=family_names(), fleet=fleet_names(),
        scale=st.sampled_from([0.0, 0.5, 1.0, 2.0]))
-def test_mpc_frozen_prefix_property(seed, hetero, scale):
-    p, truth, cum = _case(seed % 50, hetero=hetero)
+def test_mpc_frozen_prefix_property(seed, family, fleet, scale):
+    p, truth, cum = _case(seed % 50, family=family, fleet=fleet)
     res = _solve(p, truth, cum, seed, scale)
     _assert_invariants(p, res, CFG.every)
 

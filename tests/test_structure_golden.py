@@ -1,0 +1,160 @@
+"""Golden regression locks on benchmark numbers.
+
+Two locks against silent numeric drift (generator streams, packing, dispatch
+semantics, objective evaluation):
+
+* the **tiny structure_sweep grid** (the exact grid CI smokes): every cell's
+  greedy/gated dispatch aggregates, dispatch-only (``offline=False``) so the
+  values are fully deterministic — no jax.random anywhere in the path;
+* a seed-pinned **BENCH_online sanity cell**: the first instance of the
+  ``online_vs_offline`` benchmark setup, greedy + one gate policy.
+
+If a change legitimately moves these numbers (new generator defaults, a
+different dispatch rule), regenerate with
+
+    PYTHONPATH=src python tests/test_structure_golden.py --write
+
+and explain the shift in the PR.  Tolerances are tight (rtol 1e-4 on
+floats, exact on ints) — they allow float noise across platforms, not
+semantic change.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "structure_tiny.json")
+
+# Fields compared exactly (ints / strings); everything else numeric is
+# allclose.  online_best_policy is skipped: a float-noise tie between two
+# policies may flip the argmax without any semantic change.
+EXACT_FIELDS = ("family", "width", "depth", "n_jobs", "n_machines", "fleet",
+                "tasks_per_job", "greedy_makespan")
+SKIP_FIELDS = ("online_best_policy",)
+
+
+def _tiny_rows():
+    from benchmarks.structure_sweep import make_spec
+    from repro.scenarios import sweep_structure
+    rows, meta = sweep_structure(make_spec(tiny=True), offline=False)
+    return rows, meta
+
+
+def _bench_online_cell():
+    """Greedy + one gated policy on the first online_vs_offline instance."""
+    from benchmarks.online_vs_offline import SIM_HORIZON
+    from benchmarks.common import BenchSetup
+    from repro.core import generate_instance, pack, synthesize
+    from repro.core.objectives import evaluate
+    from repro.core.solvers.online_jax import (online_carbon_gated_jax,
+                                               online_greedy_jax)
+
+    setup = BenchSetup(stretch=1.5, instances=8)
+    rng = np.random.default_rng(setup.seed)
+    year = synthesize(setup.region, days=366, seed=2024)
+    inst = generate_instance(rng, n_jobs=setup.n_jobs,
+                             k_tasks=setup.k_tasks,
+                             n_machines=setup.n_machines)
+    p = pack(inst, pad_tasks=setup.n_jobs * setup.k_tasks)
+    w = year.window(int(rng.integers(0, year.n_epochs - SIM_HORIZON)),
+                    SIM_HORIZON)
+    cum = jnp.asarray(w.cumulative())
+    g = online_greedy_jax(p, SIM_HORIZON)
+    c = online_carbon_gated_jax(p, w.intensity, theta=0.3, window=48,
+                                stretch=1.25)
+    base = evaluate(p, g.start, g.assign, cum)
+    gated = evaluate(p, c.start, c.assign, cum)
+    return {
+        "greedy_makespan": int(base.makespan),
+        "greedy_carbon_g": round(float(base.carbon), 3),
+        "gated_makespan": int(gated.makespan),
+        "gated_carbon_g": round(float(gated.carbon), 3),
+        "savings_pct": round(100 * (1 - float(gated.carbon)
+                                    / float(base.carbon)), 3),
+    }
+
+
+def _load_golden():
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden file missing: {GOLDEN_PATH} — regenerate with "
+                    "`PYTHONPATH=src python tests/test_structure_golden.py "
+                    "--write`")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def _assert_row_matches(got: dict, want: dict, ctx: str):
+    assert set(got) == set(want), \
+        f"{ctx}: field set changed {sorted(set(got) ^ set(want))}"
+    for k, w in want.items():
+        if k in SKIP_FIELDS:
+            continue
+        g = got[k]
+        if k in EXACT_FIELDS:
+            assert g == w, f"{ctx}.{k}: {g!r} != golden {w!r}"
+        elif isinstance(w, list):
+            np.testing.assert_allclose(
+                np.asarray(g, float), np.asarray(w, float),
+                rtol=1e-4, atol=2e-3, err_msg=f"{ctx}.{k}")
+        elif isinstance(w, (int, float)):
+            np.testing.assert_allclose(float(g), float(w), rtol=1e-4,
+                                       atol=2e-3, err_msg=f"{ctx}.{k}")
+        else:
+            assert g == w, f"{ctx}.{k}: {g!r} != golden {w!r}"
+
+
+def test_structure_sweep_tiny_matches_golden():
+    golden = _load_golden()
+    rows, meta = _tiny_rows()
+    want_rows = golden["structure_tiny"]["cells"]
+    assert len(rows) == len(want_rows)
+    assert meta["pad_tasks"] == golden["structure_tiny"]["pad_tasks"]
+    assert meta["pad_machines"] == golden["structure_tiny"]["pad_machines"]
+    for got, want in zip(rows, want_rows):
+        ctx = (f"cell[{want['family']}-m{want['n_machines']}"
+               f"-{want['fleet']}]")
+        _assert_row_matches(got, want, ctx)
+
+
+def test_bench_online_cell_matches_golden():
+    golden = _load_golden()
+    got = _bench_online_cell()
+    want = golden["bench_online_cell"]
+    assert got["greedy_makespan"] == want["greedy_makespan"]
+    assert got["gated_makespan"] == want["gated_makespan"]
+    for k in ("greedy_carbon_g", "gated_carbon_g", "savings_pct"):
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=2e-3,
+                                   err_msg=k)
+
+
+def _write_golden():
+    rows, meta = _tiny_rows()
+    record = {
+        "_regenerate": "PYTHONPATH=src python tests/test_structure_golden.py"
+                       " --write",
+        "structure_tiny": {
+            "pad_tasks": meta["pad_tasks"],
+            "pad_machines": meta["pad_machines"],
+            "cells": rows,
+        },
+        "bench_online_cell": _bench_online_cell(),
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    # running as a script: make repo-root imports (benchmarks.*) resolve
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    if "--write" in sys.argv:
+        _write_golden()
+    else:
+        print(__doc__)
