@@ -13,8 +13,9 @@ import sys
 import time
 
 from benchmarks import (fig4_makespan, fig5_stretch, fig6_regions,
-                        fig7_carbon_vs_energy, online_vs_offline,
-                        structure_sweep, table1a_servers, table1b_tasks)
+                        fig7_carbon_vs_energy, learned_gate,
+                        online_vs_offline, structure_sweep, table1a_servers,
+                        table1b_tasks)
 
 BENCHES = {
     "fig4": fig4_makespan.run,
@@ -25,6 +26,7 @@ BENCHES = {
     "table1b": table1b_tasks.run,
     "online": online_vs_offline.run,   # beyond-paper: price of online
     "structure": structure_sweep.run_harness,  # savings vs DAG structure
+    "learned": learned_gate.run_harness,   # learned vs fixed gate thetas
 }
 
 

@@ -64,6 +64,47 @@ def evaluate(inst: PackedInstance, start: jnp.ndarray, assign: jnp.ndarray,
                       carbon(inst, start, assign, cum))
 
 
+# ---------------------------------------------------------------------------
+# Differentiable (fractional-start) objective terms — the gate-policy learner
+# (repro.learn) optimizes these; at integer starts they agree exactly with
+# makespan / carbon above, so the relaxation introduces no value gap.
+# ---------------------------------------------------------------------------
+
+def soft_makespan(inst: PackedInstance, start: jnp.ndarray,
+                  assign: jnp.ndarray) -> jnp.ndarray:
+    """Def 2.1 over *fractional* float32 starts (``max`` subgradient).
+
+    ``assign`` stays integral (the relaxation differentiates start times
+    only).  At integer starts this equals :func:`makespan` exactly.
+    """
+    comp = start.astype(jnp.float32) + \
+        task_durations(inst, assign).astype(jnp.float32)
+    return jnp.max(jnp.where(inst.task_mask, comp, 0.0))
+
+
+def soft_carbon(inst: PackedInstance, start: jnp.ndarray, assign: jnp.ndarray,
+                cum: jnp.ndarray) -> jnp.ndarray:
+    """Def 2.3 over fractional starts: linear interpolation of ``cum``.
+
+    ``d/ds soft_carbon = P_m * (intensity[s + d] - intensity[s])`` — the
+    marginal carbon of delaying a task is the intensity gap between where it
+    would end and where it would start, which is exactly the signal a
+    gradient-trained gate threshold needs.  At integer starts the
+    interpolation hits the knots and the value equals :func:`carbon`
+    bit-for-bit.
+    """
+    ftype = cum.dtype                # float32 normally; float64 under x64
+    d = task_durations(inst, assign).astype(ftype)
+    e = jnp.asarray(cum.shape[0] - 1, ftype)
+    grid = jnp.arange(cum.shape[0], dtype=ftype)
+    s0 = jnp.clip(start.astype(ftype), 0.0, e)
+    s1 = jnp.clip(start.astype(ftype) + d, 0.0, e)
+    c0 = jnp.interp(s0, grid, cum)
+    c1 = jnp.interp(s1, grid, cum)
+    g = inst.power[assign] * (c1 - c0)
+    return jnp.sum(jnp.where(inst.task_mask, g, 0.0))
+
+
 def utilization(inst: PackedInstance, start: jnp.ndarray,
                 assign: jnp.ndarray) -> jnp.ndarray:
     """Busy machine-epochs / (usable machines * makespan).

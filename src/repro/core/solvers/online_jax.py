@@ -63,6 +63,11 @@ from repro.core.objectives import makespan
 
 BIG = jnp.int32(1 << 20)
 
+# Tie-break slack on the quantile gate: intensity must exceed the threshold
+# by more than this to count as dirty (guards the == case against float
+# noise; shared by the hard gate and the soft relaxation in repro.learn).
+GATE_EPS = 1e-9
+
 
 class OnlineSchedule(NamedTuple):
     start: jnp.ndarray      # int32 [T]
@@ -100,14 +105,16 @@ def downstream_critical_path(inst: PackedInstance) -> jnp.ndarray:
     return jax.lax.fori_loop(0, T, body, jnp.zeros((T,), jnp.int32))
 
 
-def _sorted_windows(intensity: jnp.ndarray, window: jnp.ndarray,
-                    max_window: int):
+def sorted_windows(intensity: jnp.ndarray, window: jnp.ndarray,
+                   max_window: int):
     """Per-epoch forecast windows, sorted — the expensive half of the gate.
 
     Invalid slots (past ``window`` or past the forecast end) become ``+inf``
     and sort to the back; the valid count ``n[t]`` tells the quantile how far
     to interpolate.  Depends on ``window`` but *not* ``theta``, so sweeps
-    sort once per (instance, window) and reuse across thetas and stretches.
+    sort once per (instance, window) and reuse across thetas and stretches —
+    and the gate-policy *learner* (:mod:`repro.learn`) reuses one sort across
+    every gradient step.
     """
     E = intensity.shape[0]
     off = jnp.arange(max_window)
@@ -117,9 +124,15 @@ def _sorted_windows(intensity: jnp.ndarray, window: jnp.ndarray,
     return jnp.sort(vals, axis=1), valid.sum(1)
 
 
-def _quantile_dirty(intensity: jnp.ndarray, sv: jnp.ndarray, n: jnp.ndarray,
-                    theta: jnp.ndarray) -> jnp.ndarray:
-    """Interpolated ``theta``-quantile over the sorted windows -> dirty mask."""
+def quantile_threshold(sv: jnp.ndarray, n: jnp.ndarray,
+                       theta: jnp.ndarray) -> jnp.ndarray:
+    """Interpolated ``theta``-quantile of each sorted window -> thresh [E].
+
+    Replicates ``np.quantile``'s linear interpolation.  ``theta`` may be a
+    scalar or a per-epoch ``[E]`` vector (forecast-conditioned gates); either
+    way the map is piecewise-linear in ``theta``, so ``jax.grad`` through it
+    is exact almost everywhere — the property :mod:`repro.learn` builds on.
+    """
     vi = theta.astype(jnp.float32) * (n - 1).astype(jnp.float32)
     lo = jnp.floor(vi)
     gamma = vi - lo
@@ -129,9 +142,14 @@ def _quantile_dirty(intensity: jnp.ndarray, sv: jnp.ndarray, n: jnp.ndarray,
     b = jnp.take_along_axis(sv, hi_i[:, None], axis=1)[:, 0]
     diff = b - a
     # np.quantile's _lerp switches formula at gamma >= 0.5 for accuracy.
-    thresh = jnp.where(gamma >= 0.5, b - diff * (1.0 - gamma),
-                       a + diff * gamma)
-    return intensity > thresh + 1e-9
+    return jnp.where(gamma >= 0.5, b - diff * (1.0 - gamma),
+                     a + diff * gamma)
+
+
+def _quantile_dirty(intensity: jnp.ndarray, sv: jnp.ndarray, n: jnp.ndarray,
+                    theta: jnp.ndarray) -> jnp.ndarray:
+    """Interpolated ``theta``-quantile over the sorted windows -> dirty mask."""
+    return intensity > quantile_threshold(sv, n, theta) + GATE_EPS
 
 
 @functools.partial(jax.jit, static_argnames=("max_window",))
@@ -144,7 +162,7 @@ def dirty_mask(intensity: jnp.ndarray, theta: jnp.ndarray,
     ``theta`` and ``window`` are traced, so a policy grid vmaps over them;
     only ``max_window`` (the sort width) is static.
     """
-    sv, n = _sorted_windows(intensity, window, max_window)
+    sv, n = sorted_windows(intensity, window, max_window)
     return _quantile_dirty(intensity, sv, n, theta)
 
 
@@ -242,16 +260,29 @@ def online_greedy_jax(inst: PackedInstance, n_epochs: int,
 def online_carbon_gated_jax(inst: PackedInstance, intensity,
                             theta: float = 0.5, window: int = 96,
                             stretch: float = 1.5,
-                            machine_rule: str = "earliest_finish"
-                            ) -> OnlineSchedule:
+                            machine_rule: str = "earliest_finish",
+                            soft: bool = False, temp: float = 0.05):
     """Single-instance gated dispatch (mirrors ``online_carbon_gated``).
 
     Runs the greedy baseline first to set ``budget = int(stretch * makespan)``
     (same ``machine_rule``, so the budget is relative to the rule's own
     baseline), then the gated simulation over the forecast horizon.
+
+    ``soft=True`` returns the differentiable relaxation instead — a
+    :class:`repro.learn.relax.SoftDispatch` whose ``hard`` field is exactly
+    this function's ``soft=False`` schedule (same threshold kernel, same
+    simulator) and whose soft fields carry ``jax.grad``-able start times at
+    temperature ``temp``.  The relaxation contract (temp -> 0 == hard gate)
+    lives in :mod:`repro.learn`.
     """
     intensity = jnp.asarray(intensity)
     n_epochs = int(intensity.shape[0])
+    if soft:
+        from repro.learn.relax import soft_dispatch   # local: avoids cycle
+        return soft_dispatch(inst, intensity, jnp.float32(theta),
+                             jnp.int32(window), jnp.float32(stretch),
+                             max_window=int(window), temp=temp,
+                             machine_rule=machine_rule)
     g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
     ms0 = makespan(inst, g.start, g.assign)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
@@ -286,7 +317,7 @@ def _sweep(batch: PackedInstance, intensity: jnp.ndarray,
         # window is the expensive axis (the masked sort); keep it outermost
         # so thetas and stretches reuse each sort.
         def per_window(wi):
-            sv, n = _sorted_windows(inten, wi, max_window)
+            sv, n = sorted_windows(inten, wi, max_window)
 
             def per_theta(th):
                 dirty = _quantile_dirty(inten, sv, n, th)

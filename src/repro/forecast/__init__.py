@@ -50,13 +50,16 @@ full sweep.
 """
 from repro.forecast.models import (AR1_RHO, EPOCHS_PER_DAY, Forecast, MODELS,
                                    error_std_per_lead, issue, lead_quantiles)
-from repro.forecast.rolling import (day_ahead_dirty_mask, n_replans,
+from repro.forecast.rolling import (band_conditioned_theta,
+                                    day_ahead_dirty_mask, n_replans,
                                     online_rolling_gated_jax,
-                                    rolling_dirty_mask)
+                                    rolling_band_dirty_mask,
+                                    rolling_dirty_mask, theta_band_features)
 
 __all__ = [
     "AR1_RHO", "EPOCHS_PER_DAY", "Forecast", "MODELS",
     "error_std_per_lead", "issue", "lead_quantiles",
-    "day_ahead_dirty_mask", "n_replans", "online_rolling_gated_jax",
-    "rolling_dirty_mask",
+    "band_conditioned_theta", "day_ahead_dirty_mask", "n_replans",
+    "online_rolling_gated_jax", "rolling_band_dirty_mask",
+    "rolling_dirty_mask", "theta_band_features",
 ]

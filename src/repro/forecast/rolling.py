@@ -12,7 +12,7 @@ errors, fresh thresholds.
 
 Everything is one ``lax.scan`` over the (static) replan boundaries, built on
 the same masked-sort + interpolated-quantile kernels the day-ahead gate uses
-(``_sorted_windows`` / ``_quantile_dirty``), so a **zero-noise rolling
+(``sorted_windows`` / ``_quantile_dirty``), so a **zero-noise rolling
 forecast reproduces the day-ahead gate bit-exactly** — the regression the
 tests lock.  The dirty decision at epoch ``t`` compares the *observed*
 intensity ``truth[t]`` (real-time telemetry) against the quantile of the
@@ -31,8 +31,8 @@ import jax.numpy as jnp
 from repro.core.instance import PackedInstance
 from repro.core.objectives import makespan
 from repro.core.solvers.online_jax import (OnlineSchedule, _quantile_dirty,
-                                           _sorted_windows, online_greedy_jax,
-                                           simulate_online)
+                                           online_greedy_jax, simulate_online,
+                                           sorted_windows as _sorted_windows)
 from repro.forecast import models
 
 
@@ -41,6 +41,34 @@ def n_replans(n_epochs: int, every: int) -> int:
     if every <= 0:
         raise ValueError(f"replan interval must be positive, got {every}")
     return -(-n_epochs // every)
+
+
+def _rolling_gate(truth, window, key, scale, every, max_window, model, rho,
+                  theta_of):
+    """Shared rolling re-quantile scan; ``theta_of(fc)`` picks the quantile.
+
+    One ``lax.scan`` over the replan boundaries: issue ``k`` governs epochs
+    ``[k * every, (k + 1) * every)`` (error seed ``fold_in(key, k)``, so
+    successive issues are independent draws while leads within one issue
+    stay AR(1)-correlated).  ``theta_of`` maps the issued
+    :class:`~repro.forecast.models.Forecast` to a scalar or per-epoch
+    quantile — the flat gate ignores ``fc``, the band-conditioned gate
+    reads its uncertainty band.
+    """
+    truth = jnp.asarray(truth, jnp.float32)
+    E = truth.shape[0]
+    K = n_replans(E, every)
+
+    def one_issue(_, k):
+        fc = models.issue(truth, jnp.int32(k * every),
+                          key=jax.random.fold_in(key, k),
+                          model=model, scale=scale, rho=rho)
+        sv, n = _sorted_windows(fc.point, window, max_window)
+        return None, _quantile_dirty(truth, sv, n, theta_of(fc))
+
+    _, rows = jax.lax.scan(one_issue, None, jnp.arange(K, dtype=jnp.int32))
+    e = jnp.arange(E, dtype=jnp.int32)
+    return rows[e // every, e]
 
 
 @functools.partial(jax.jit,
@@ -52,26 +80,80 @@ def rolling_dirty_mask(truth: jnp.ndarray, theta: jnp.ndarray,
                        rho: float = models.AR1_RHO) -> jnp.ndarray:
     """``dirty[t]`` under rolling re-quantile (see module docstring).
 
-    Epoch ``t`` is governed by the forecast issued at ``(t // every) * every``
-    (error seed ``fold_in(key, k)`` for issue ``k``, so successive issues are
-    independent draws while leads within one issue stay AR(1)-correlated).
     ``every`` and ``max_window`` are static; ``theta``/``window``/``scale``
     are traced, so robustness grids vmap over them without recompiling.
     """
+    return _rolling_gate(truth, window, key, scale, every, max_window,
+                         model, rho, lambda fc: theta)
+
+
+# ---------------------------------------------------------------------------
+# Forecast-conditioned thetas: gate quantile as a function of the per-lead
+# uncertainty band (ROADMAP "forecast-aware gate thetas").
+# ---------------------------------------------------------------------------
+
+def band_conditioned_theta(theta_base: jnp.ndarray, theta_slope: jnp.ndarray,
+                           feat: jnp.ndarray) -> jnp.ndarray:
+    """Per-epoch gate quantile ``clip(base + slope * feat, 0, 1)``.
+
+    ``feat`` is the normalized per-lead uncertainty (error std in
+    trace-stds, :attr:`~repro.forecast.models.Forecast.std` over
+    ``std(truth)``): a positive ``slope`` raises the quantile — gates less —
+    where the forecast is uncertain, a negative one gates harder.
+    ``slope = 0`` is exactly the flat ``theta_base`` (bit-exact, which the
+    regression test locks).  The clip keeps the quantile in the domain the
+    interpolation supports; :mod:`repro.learn` trains an unconstrained
+    sigmoid parametrization instead and hands the evaluated per-epoch
+    vector straight to :func:`~repro.core.solvers.online_jax.
+    quantile_threshold`, which accepts either form.
+    """
+    return jnp.clip(theta_base + theta_slope * feat, 0.0, 1.0)
+
+
+def theta_band_features(truth: jnp.ndarray, scale, every: int | None = None,
+                        rho: float = models.AR1_RHO) -> jnp.ndarray:
+    """Normalized per-lead uncertainty feature, float32 [E].
+
+    ``feat[e] = std(lead of e) / std(truth) = scale * g(lead)`` with ``g``
+    the stationary-AR(1) growth of :func:`repro.forecast.models.
+    error_std_per_lead` — the feature the band-conditioned theta (and the
+    forecast-conditioned learner) reads.  ``every = None`` is the day-ahead
+    case (one issue at epoch 0, leads grow over the whole horizon);
+    otherwise leads reset at each replan boundary, giving the sawtooth
+    profile of the rolling re-issue sequence.
+    """
     truth = jnp.asarray(truth, jnp.float32)
     E = truth.shape[0]
-    K = n_replans(E, every)
-
-    def one_issue(_, k):
-        fc = models.issue(truth, jnp.int32(k * every),
-                          key=jax.random.fold_in(key, k),
-                          model=model, scale=scale, rho=rho)
-        sv, n = _sorted_windows(fc.point, window, max_window)
-        return None, _quantile_dirty(truth, sv, n, theta)
-
-    _, rows = jax.lax.scan(one_issue, None, jnp.arange(K, dtype=jnp.int32))
     e = jnp.arange(E, dtype=jnp.int32)
-    return rows[e // every, e]
+    lead = (e if every is None else e % every).astype(jnp.float32)
+    g = jnp.sqrt(1.0 - jnp.float32(rho) ** (2.0 * lead))
+    return jnp.asarray(scale, jnp.float32) * g
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "every", "max_window"))
+def rolling_band_dirty_mask(truth: jnp.ndarray, theta_base: jnp.ndarray,
+                            theta_slope: jnp.ndarray, window: jnp.ndarray,
+                            key: jax.Array, scale: jnp.ndarray, every: int,
+                            max_window: int, model: str = "oracle_ar1",
+                            rho: float = models.AR1_RHO) -> jnp.ndarray:
+    """Rolling re-quantile gate with a band-conditioned theta profile.
+
+    Identical scan to :func:`rolling_dirty_mask` (one shared kernel,
+    ``_rolling_gate``) except the quantile at epoch ``e`` is
+    :func:`band_conditioned_theta` evaluated on the governing issue's own
+    uncertainty band at ``e``'s lead.  ``theta_slope = 0`` reproduces
+    :func:`rolling_dirty_mask` bit-exactly for ``theta_base`` in ``[0, 1]``
+    (the per-epoch theta vector collapses to the flat ``theta_base`` and
+    the quantile kernel broadcasts either form identically) — the
+    regression ``tests/test_rolling.py`` locks.
+    """
+    truth = jnp.asarray(truth, jnp.float32)
+    sigma = jnp.maximum(jnp.std(truth), 1e-6)
+    return _rolling_gate(
+        truth, window, key, scale, every, max_window, model, rho,
+        lambda fc: band_conditioned_theta(theta_base, theta_slope,
+                                          fc.std / sigma))
 
 
 @functools.partial(jax.jit, static_argnames=("model", "max_window"))

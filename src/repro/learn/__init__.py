@@ -1,0 +1,41 @@
+"""Differentiable gate-policy learning for the online dispatcher.
+
+The offline bi-level bound (paper §3) and the fixed ``(theta, window,
+stretch)`` grid of the online gate (§4 / PR 1) bracket the achievable
+carbon savings; this package closes the gap by *learning* the gate
+threshold with gradients — per scenario family, per fleet, and optionally
+conditioned on the forecast's per-lead uncertainty bands:
+
+    relax  — the differentiable relaxation: sigmoid gate over the shared
+             sorted-window quantile threshold, expected-wait epoch scan,
+             DAG-propagated soft starts (``soft_dispatch``)
+    loss   — carbon-under-makespan-budget objective: straight-through hard
+             forward values, soft gradients; budget penalty routed through
+             the shared validator (``validate.total_violations``)
+    train  — one-XLA-program Adam loop (``repro.optim.adamw``, no optax):
+             ``lax.scan`` over steps, ``vmap`` over ``pack_aligned``
+             instance batches, geometric temperature annealing
+
+**Relaxation contract** (property-tested across every scenario family x
+fleet in ``tests/test_learn.py``): as ``temp -> 0`` the relaxation *is* the
+hard gate — ``soft_dispatch``'s ``hard`` schedule is bit-exact with
+``online_carbon_gated_jax`` at every temperature (same threshold kernel,
+same simulator; the relaxation only adds gradient structure around it), and
+the sigmoid mask converges pointwise to the boolean quantile gate, so
+``soft.dirty > 0.5`` equals the hard mask for every ``temp``.  Training
+metrics with ``straight_through=True`` are therefore always reported in
+exact hard-dispatch units; only gradients use the relaxation.
+"""
+from repro.learn.loss import GateLossTerms, gate_loss
+from repro.learn.relax import (SoftDispatch, expected_wait, soft_dispatch,
+                               soft_gate, soft_starts)
+from repro.learn.train import (LearnConfig, TrainResult, evaluate_theta,
+                               greedy_reference, logit, train_gate)
+
+__all__ = [
+    "GateLossTerms", "gate_loss",
+    "SoftDispatch", "expected_wait", "soft_dispatch", "soft_gate",
+    "soft_starts",
+    "LearnConfig", "TrainResult", "evaluate_theta", "greedy_reference",
+    "logit", "train_gate",
+]

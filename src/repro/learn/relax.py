@@ -1,0 +1,169 @@
+"""Differentiable relaxation of the gated online dispatcher.
+
+The hard gate (:mod:`repro.core.solvers.online_jax`) is a step function of
+``theta``: an epoch is *dirty* iff its intensity exceeds the interpolated
+``theta``-quantile of its forecast window, and a ready task waits while the
+current epoch is dirty (budget permitting).  Neither the mask nor the
+integer dispatch admits a gradient.  This module relaxes exactly the two
+discrete pieces and nothing else:
+
+* **gate** — :func:`soft_gate` replaces the ``intensity > thresh`` step with
+  ``sigmoid((intensity - thresh - GATE_EPS) / temp)``, sharing the sorted
+  windows and interpolated quantile threshold with the hard gate
+  (:func:`~repro.core.solvers.online_jax.sorted_windows` /
+  :func:`~repro.core.solvers.online_jax.quantile_threshold`), so the two
+  gates disagree only inside an ``O(temp)`` band around the threshold and
+  coincide as ``temp -> 0``;
+* **waiting** — :func:`expected_wait` treats the soft mask as per-epoch
+  waiting probabilities: ``W[e] = dirty[e] * (1 + W[e+1])`` (one reverse
+  ``lax.scan`` over epochs) is the expected number of epochs a task ready at
+  ``e`` waits before the gate opens, which at ``temp -> 0`` is exactly the
+  hard gate's run of consecutive dirty epochs; :func:`soft_starts` then
+  propagates fractional start times through the DAG (topological
+  ``fori_loop``, ``max`` over predecessor completions) with the same
+  budget cap the hard dispatcher enforces (``waiting`` only while
+  ``t + 1 + cp <= budget``).
+
+Machine contention is *not* relaxed: soft starts assume a free machine, the
+accuracy of which grows with fleet slack — the regime where gating matters.
+The **straight-through** composition in :mod:`repro.learn.loss` therefore
+evaluates forward values on the true hard dispatch (contention and all) and
+takes gradients through the soft starts.
+
+:func:`soft_dispatch` bundles the pieces: its ``hard`` field is bit-exact
+with ``online_carbon_gated_jax`` (same threshold kernel, same simulator —
+property-tested across every scenario family x fleet), and its soft fields
+are ``jax.grad``-able in ``theta`` (and in per-epoch theta vectors, the
+forecast-conditioned case).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.objectives import makespan
+from repro.core.solvers.online_jax import (GATE_EPS, OnlineSchedule,
+                                           downstream_critical_path,
+                                           online_greedy_jax,
+                                           quantile_threshold,
+                                           simulate_online, sorted_windows)
+from repro.core.validate import task_durations
+
+
+class SoftDispatch(NamedTuple):
+    """Hard forward schedule + differentiable relaxation around it."""
+
+    hard: OnlineSchedule     # exact gated dispatch (forward values)
+    greedy: OnlineSchedule   # carbon-agnostic baseline (budget reference)
+    start: jnp.ndarray       # float32 [T] soft starts (jax.grad-able)
+    dirty: jnp.ndarray       # float32 [E] sigmoid-relaxed dirty mask
+    budget: jnp.ndarray      # int32 scalar = int(stretch * greedy makespan)
+
+
+def soft_gate(intensity: jnp.ndarray, sv: jnp.ndarray, n: jnp.ndarray,
+              theta: jnp.ndarray, temp: jnp.ndarray):
+    """Sigmoid-relaxed dirty mask over precomputed sorted windows.
+
+    Returns ``(soft, hard)``: ``soft`` is
+    ``sigmoid((intensity - thresh - GATE_EPS) / (temp * std(intensity)))``
+    and ``hard`` the exact boolean gate from the same threshold, so
+    ``soft > 0.5`` equals ``hard`` for every ``temp`` and ``soft -> hard``
+    pointwise as ``temp -> 0``.  The margin is normalized by the trace's
+    std so ``temp`` is scale-free ("smear the gate over ``temp`` trace-stds
+    around the threshold") — raw gCO2/kWh margins would make any fixed
+    temperature schedule trace-dependent.  ``theta`` may be scalar or
+    per-epoch ``[E]``.
+    """
+    thresh = quantile_threshold(sv, n, theta)
+    margin = intensity - thresh - GATE_EPS
+    scale = jax.lax.stop_gradient(jnp.maximum(jnp.std(intensity), 1e-6))
+    soft = jax.nn.sigmoid(margin / jnp.maximum(temp * scale, 1e-8))
+    return soft, margin > 0
+
+
+def expected_wait(soft_dirty: jnp.ndarray) -> jnp.ndarray:
+    """Expected gate-waiting epochs from each epoch, ``W[e]``, float32 [E].
+
+    ``W[e] = dirty[e] * (1 + W[e+1])`` (reverse ``lax.scan``): with hard
+    0/1 masks this counts the run of consecutive dirty epochs starting at
+    ``e``; with soft masks it is the expectation under independent per-epoch
+    waiting probabilities.  Gradients flow through the whole scan.
+    """
+    def step(w_next, a):
+        w = a * (1.0 + w_next)
+        return w, w
+
+    _, ws = jax.lax.scan(step, jnp.zeros((), soft_dirty.dtype), soft_dirty,
+                         reverse=True)
+    return ws
+
+
+def soft_starts(inst: PackedInstance, wait: jnp.ndarray, dur: jnp.ndarray,
+                cp: jnp.ndarray, budget: jnp.ndarray) -> jnp.ndarray:
+    """Fractional start times through the DAG, float32 [T].
+
+    Topological recursion (tasks are topologically indexed, so one
+    ``fori_loop`` pass suffices): a task becomes ready at
+    ``r = max(arrival, max over preds of soft completion)``, then waits the
+    expected gate delay ``wait`` interpolated at ``r``, capped by the same
+    budget rule the hard dispatcher enforces — waiting is only allowed while
+    ``t + 1 + cp <= budget``, so the waiting allowance from ``r`` is
+    ``max(budget - cp - r, 0)``.  ``dur`` are the (stop-gradient) durations
+    on the hard dispatch's chosen machines; machine contention is not
+    modeled (see module docstring).
+    """
+    T = inst.T
+    E = wait.shape[0]
+    ftype = wait.dtype               # float32 normally; float64 under x64
+    grid = jnp.arange(E, dtype=ftype)
+    dreal = dur.astype(ftype)
+    allow_from = budget.astype(ftype) - cp.astype(ftype)
+    preds = inst.pred & inst.task_mask[None, :]
+    arrival = inst.arrival.astype(ftype)
+
+    def body(t, s):
+        comp = s + dreal
+        r = jnp.maximum(arrival[t], jnp.max(jnp.where(preds[t], comp, 0.0)))
+        w = jnp.interp(jnp.clip(r, 0.0, grid[-1]), grid, wait)
+        st = r + jnp.minimum(w, jnp.maximum(allow_from[t] - r, 0.0))
+        return s.at[t].set(jnp.where(inst.task_mask[t], st, 0.0))
+
+    return jax.lax.fori_loop(0, T, body, jnp.zeros((T,), ftype))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_window", "machine_rule"))
+def soft_dispatch(inst: PackedInstance, intensity: jnp.ndarray,
+                  theta: jnp.ndarray, window: jnp.ndarray,
+                  stretch: jnp.ndarray, max_window: int,
+                  temp: float = 0.05,
+                  machine_rule: str = "earliest_finish") -> SoftDispatch:
+    """Gated dispatch with a differentiable relaxation attached.
+
+    Forward semantics are `online_carbon_gated_jax`'s, bit for bit: greedy
+    baseline fixes ``budget = int(stretch * makespan)``, the hard quantile
+    gate masks epochs, ``simulate_online`` dispatches.  On top, the returned
+    ``start``/``dirty`` fields carry the temperature-``temp`` relaxation of
+    the gate decision, differentiable in ``theta`` (scalar or per-epoch).
+    """
+    intensity = jnp.asarray(intensity, jnp.float32)
+    n_epochs = int(intensity.shape[0])
+    g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+    ms0 = makespan(inst, g.start, g.assign)
+    budget = (jnp.asarray(stretch, jnp.float32)
+              * ms0.astype(jnp.float32)).astype(jnp.int32)
+    sv, n = sorted_windows(intensity, jnp.asarray(window, jnp.int32),
+                           max_window)
+    soft, hard_mask = soft_gate(intensity, sv, n, theta,
+                                jnp.asarray(temp, jnp.float32))
+    hard = simulate_online(inst, hard_mask, budget, n_epochs=n_epochs,
+                           machine_rule=machine_rule)
+    dur = task_durations(inst, hard.assign)
+    cp = downstream_critical_path(inst)
+    start = soft_starts(inst, expected_wait(soft), dur, cp, budget)
+    return SoftDispatch(hard=hard, greedy=g, start=start, dirty=soft,
+                        budget=budget)

@@ -1,0 +1,226 @@
+"""Gate-policy training: one XLA program per (family x fleet) grid.
+
+The trainable object is tiny — per *group* (a scenario family x fleet cell,
+or any other partition of the instance batch) a logistic-parametrized gate
+policy ``theta(e) = sigmoid(base_g + slope_g * feat[e])``:
+
+* with ``feats = None`` the slope axis is inert (zero features, zero
+  gradient) and each group learns one scalar ``theta`` — the learned
+  counterpart of the fixed ``(theta, window, stretch)`` grid;
+* with ``feats`` set to per-epoch forecast features (the per-lead
+  uncertainty bands of :func:`repro.forecast.rolling.theta_band_features`)
+  each group learns a *forecast-conditioned* theta profile.
+
+The whole optimization is one jitted program: ``lax.scan`` over training
+steps (gradients flow through the epoch scan of the relaxation inside each
+step), ``vmap`` over the stacked :func:`~repro.scenarios.batching.
+pack_aligned` instances, Adam from :mod:`repro.optim.adamw` (no optax),
+temperature annealed geometrically from ``temp0`` to ``temp1`` so the
+relaxation tightens toward the hard gate as training converges.
+Everything is deterministic — no PRNG anywhere — which is what the golden
+regression (``tests/test_learn_golden.py``) locks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.objectives import carbon, makespan
+from repro.core.solvers.online_jax import (_quantile_dirty,
+                                           online_greedy_jax,
+                                           simulate_online, sorted_windows)
+from repro.learn.loss import gate_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+class LearnConfig(NamedTuple):
+    """Training knobs (hashable — used as a jit-static argument)."""
+
+    steps: int = 150            # gradient steps (the scanned axis)
+    lr: float = 0.08
+    temp0: float = 0.5          # relaxation temperature at step 0 ...
+    temp1: float = 0.02         # ... annealed geometrically to this
+    lam: float = 0.2            # budget-penalty weight
+    straight_through: bool = True
+    machine_rule: str = "earliest_finish"
+
+
+class TrainResult(NamedTuple):
+    raw: jnp.ndarray           # float32 [G, 2] — (base, slope) logits
+    theta: jnp.ndarray         # float32 [G] — sigmoid(base), the flat theta
+    loss_curve: jnp.ndarray    # float32 [steps] — mean training loss
+    carbon_curve: jnp.ndarray  # float32 [steps] — mean carbon ratio (hard)
+    theta_curve: jnp.ndarray   # float32 [steps, G]
+
+
+def logit(p) -> jnp.ndarray:
+    p = jnp.clip(jnp.asarray(p, jnp.float32), 1e-4, 1.0 - 1e-4)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def _anneal(cfg: LearnConfig, k: jnp.ndarray) -> jnp.ndarray:
+    frac = k.astype(jnp.float32) / max(cfg.steps - 1, 1)
+    return jnp.float32(cfg.temp0) * (
+        jnp.float32(cfg.temp1) / jnp.float32(cfg.temp0)) ** frac
+
+
+def greedy_reference(batch: PackedInstance, cum: jnp.ndarray, n_epochs: int,
+                     machine_rule: str = "earliest_finish"):
+    """Per-instance greedy baseline: (makespan [B], carbon [B]).
+
+    Delegates to the dispatcher's own
+    :func:`~repro.core.solvers.online_jax.online_greedy_jax`, so the
+    learner's budgets and savings are always relative to the exact
+    reference the fixed-grid sweeps use.
+    """
+    def one(inst, cm):
+        g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+        ms = makespan(inst, g.start, g.assign)
+        return ms, carbon(inst, g.start, g.assign, cm)
+
+    return jax.vmap(one)(batch, cum)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "max_window", "n_epochs"))
+def _train(batch: PackedInstance, intensity, cum, group_of, window, budget,
+           base_carbon, ms0, feats, raw0, cfg: LearnConfig, max_window: int,
+           n_epochs: int) -> TrainResult:
+    sv, n = jax.vmap(lambda i, w: sorted_windows(i, w, max_window))(
+        intensity, window)
+    base_c = jnp.maximum(base_carbon, 1e-6)
+    ms_norm = jnp.maximum(ms0.astype(jnp.float32), 1.0)
+
+    def loss_fn(raw, temp):
+        base = raw[:, 0][group_of]                    # [B]
+        slope = raw[:, 1][group_of]
+        th = jax.nn.sigmoid(base[:, None] + slope[:, None] * feats)  # [B, E]
+
+        def per_inst(inst, cm, it, s, nn, t, bud):
+            return gate_loss(inst, cm, it, s, nn, t, bud, temp, n_epochs,
+                             cfg.straight_through, cfg.machine_rule)
+
+        terms = jax.vmap(per_inst)(batch, cum, intensity, sv, n, th, budget)
+        ratio = terms.carbon / base_c
+        pen = terms.penalty / ms_norm
+        return jnp.mean(ratio + cfg.lam * pen), jnp.mean(ratio)
+
+    opt_cfg = AdamWConfig(lr=cfg.lr, warmup_steps=max(1, cfg.steps // 10),
+                          total_steps=cfg.steps, min_lr_frac=0.1,
+                          weight_decay=0.0, clip_norm=1.0)
+    params = {"raw": raw0}
+    state = adamw_init(params, opt_cfg)
+
+    def step(carry, k):
+        params, state = carry
+        temp = _anneal(cfg, k)
+        (loss, ratio), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params["raw"], temp)
+        params, state, _ = adamw_update(params, {"raw": grads}, state,
+                                        opt_cfg)
+        return (params, state), (loss, ratio,
+                                 jax.nn.sigmoid(params["raw"][:, 0]))
+
+    (params, _), (losses, ratios, thetas) = jax.lax.scan(
+        step, (params, state), jnp.arange(cfg.steps, dtype=jnp.int32))
+    raw = params["raw"]
+    return TrainResult(raw=raw, theta=jax.nn.sigmoid(raw[:, 0]),
+                       loss_curve=losses, carbon_curve=ratios,
+                       theta_curve=thetas)
+
+
+def train_gate(batch: PackedInstance, intensity, cum, group_of,
+               window, stretch: float, theta0,
+               cfg: LearnConfig = LearnConfig(),
+               feats=None, baseline=None) -> TrainResult:
+    """Learn per-group gate thetas on a stacked instance batch.
+
+    ``batch``/``intensity``/``cum``: stacked ``[B, ...]`` instances with
+    their forecast windows and cumulative traces; ``group_of [B]`` maps each
+    instance to its parameter group (0..G-1, G from ``theta0``'s length);
+    ``window [B]`` is each instance's gate window; ``stretch`` the shared
+    stretch budget (per-group budgets: call once per stretch — budgets are
+    relative to each instance's own greedy baseline either way); ``theta0
+    [G]`` the initialization (e.g. the best fixed-grid theta per group);
+    ``feats [B, E]`` optional per-epoch features for forecast-conditioned
+    thetas; ``baseline`` an optional precomputed ``(greedy_makespan [B],
+    greedy_carbon [B])`` pair from a sweep that already dispatched the
+    greedy baseline (omitted, it is computed here via
+    :func:`greedy_reference`).  Deterministic; one jitted program.
+    """
+    intensity = jnp.asarray(intensity, jnp.float32)
+    n_epochs = int(intensity.shape[-1])
+    window = np.asarray(window, np.int32)
+    max_window = int(window.max())
+    ms0, base_c = (baseline if baseline is not None else
+                   greedy_reference(batch, jnp.asarray(cum), n_epochs,
+                                    cfg.machine_rule))
+    ms0 = jnp.asarray(ms0, jnp.int32)
+    base_c = jnp.asarray(base_c, jnp.float32)
+    budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
+        jnp.int32)
+    theta0 = jnp.asarray(theta0, jnp.float32)
+    raw0 = jnp.stack([logit(theta0), jnp.zeros_like(theta0)], axis=1)
+    if feats is None:
+        feats = jnp.zeros(intensity.shape, jnp.float32)
+    return _train(batch, intensity, jnp.asarray(cum), jnp.asarray(group_of),
+                  jnp.asarray(window), budget, base_c, ms0,
+                  jnp.asarray(feats, jnp.float32), raw0, cfg, max_window,
+                  n_epochs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_window", "n_epochs",
+                                    "machine_rule"))
+def _hard_eval(batch, intensity, cum, theta, window, budget, max_window: int,
+               n_epochs: int, machine_rule: str):
+    def one(inst, inten, cm, th, wi, bud):
+        sv, n = sorted_windows(inten, wi, max_window)
+        dirty = _quantile_dirty(inten, sv, n, th)
+        sch = simulate_online(inst, dirty, bud, n_epochs=n_epochs,
+                              machine_rule=machine_rule)
+        return (carbon(inst, sch.start, sch.assign, cm),
+                makespan(inst, sch.start, sch.assign),
+                jnp.all(sch.scheduled | ~inst.task_mask))
+
+    return jax.vmap(one)(batch, intensity, cum, theta, window, budget)
+
+
+def evaluate_theta(batch: PackedInstance, intensity, cum, theta, window,
+                   stretch: float,
+                   machine_rule: str = "earliest_finish", baseline=None):
+    """Hard-dispatch evaluation of learned thetas (no relaxation anywhere).
+
+    ``theta``: per-instance scalar ``[B]`` or per-epoch ``[B, E]``.  Returns
+    ``(savings [B], gated_carbon [B], base_carbon [B], makespan_ratio [B])``
+    — the same metrics the fixed-grid sweep reports, so learned and fixed
+    policies compare apples to apples.  ``baseline``: optional precomputed
+    ``(greedy_makespan [B], greedy_carbon [B])``, as in :func:`train_gate`.
+    """
+    intensity = jnp.asarray(intensity, jnp.float32)
+    n_epochs = int(intensity.shape[-1])
+    window = np.asarray(window, np.int32)
+    ms0, base_c = (baseline if baseline is not None else
+                   greedy_reference(batch, jnp.asarray(cum), n_epochs,
+                                    machine_rule))
+    ms0 = jnp.asarray(ms0, jnp.int32)
+    base_c = jnp.asarray(base_c, jnp.float32)
+    budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
+        jnp.int32)
+    gated_c, gated_ms, done = _hard_eval(
+        batch, intensity, jnp.asarray(cum), jnp.asarray(theta, jnp.float32),
+        jnp.asarray(window), budget, int(window.max()), n_epochs,
+        machine_rule)
+    if not bool(jnp.all(done)):
+        raise AssertionError(
+            "gated dispatch incomplete at evaluation — raise the horizon")
+    savings = 1.0 - gated_c / jnp.maximum(base_c, 1e-6)
+    ms_ratio = (gated_ms.astype(jnp.float32)
+                / jnp.maximum(ms0.astype(jnp.float32), 1.0))
+    return savings, gated_c, base_c, ms_ratio

@@ -32,6 +32,24 @@ from repro.models.params import ParamDef
 from repro.models.parallel import ParallelCfg
 
 
+def _shard_map(body, *, mesh, in_specs, out_specs):
+    """``shard_map`` across the JAX API move, replication checks off.
+
+    Newer JAX exposes ``jax.shard_map`` (replication checking via
+    ``check_vma``); older releases only have
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  The psum
+    in the EP body makes the output fully replicated either way, but the
+    checker can't prove it through the scatter, so it is disabled under
+    whichever spelling the running JAX accepts.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def moe_defs(cfg: ArchConfig) -> dict:
     E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
     glu = 2 if cfg.act.endswith("_glu") else 1
@@ -171,10 +189,10 @@ def _moe_ep(x2d, ids, wgt, w_in, w_out, cfg: ArchConfig, par: ParallelCfg):
             e_first=e_first, e_local=e_local, capacity=cap, act=cfg.act)
         return jax.lax.psum(y, "model")
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec, w_in_spec, w_out_spec),
-        out_specs=tok_spec, check_vma=False)
+        out_specs=tok_spec)
     return fn(x2d, ids, wgt, w_in, w_out)
 
 

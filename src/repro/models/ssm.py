@@ -101,7 +101,10 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh,
                         preferred_element_type=jnp.float32)
     M = scores * L * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
-    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M.astype(x.dtype), xc,
+    # f32 throughout, matching the Pallas kernel (kernels/ssd_scan) and the
+    # f32 decode recurrence — a bf16 M here puts prefill's last-position
+    # output a bf16 ulp away from the decode continuation of its own state.
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, xc.astype(jnp.float32),
                          preferred_element_type=jnp.float32)
 
     # --- chunk states ---
@@ -128,7 +131,7 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     # --- inter-chunk contribution: y += C_i · (decay_i * h_in) ---
     in_decay = jnp.exp(cum).transpose(0, 1, 3, 2)          # [B,nc,Q,H]
     h_in = h_in.swapaxes(0, 1)                             # [B,nc,H,P,N]
-    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch, h_in,
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch.astype(jnp.float32), h_in,
                          preferred_element_type=jnp.float32)
     y = y_intra + y_inter * in_decay[..., None]
     return y.reshape(Bsz, S, H, Pd).astype(x.dtype), h_final
@@ -182,7 +185,9 @@ def ssm_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig, par: ParallelCfg,
         full = jnp.concatenate([conv_st, jnp.concatenate([xin, bc], -1)], 1)
         w = jnp.concatenate([p["conv_x"], p["conv_bc"]], 1)
         b = jnp.concatenate([p["conv_bias_x"], p["conv_bias_bc"]], 0)
-        conv_out = jnp.einsum("bkc,kc->bc", full, cast(w)) + cast(b)
+        # Ordered shift-sum, NOT an einsum: bit-identical rounding to
+        # _causal_conv's prefill pass, so the conv handoff is exact.
+        conv_out = sum(full[:, i] * cast(w)[i] for i in range(K)) + cast(b)
         conv_out = jax.nn.silu(conv_out)[:, None]          # [B,1,C]
         xin, bc = conv_out[..., :di], conv_out[..., di:]
         new_conv = full[:, 1:]

@@ -24,14 +24,15 @@ from repro.scenarios.families import FAMILIES, FAMILY_NAMES, build_dag
 from repro.scenarios.fleets import FLEETS, FLEET_NAMES, build_fleet
 from repro.scenarios.generator import (ScenarioConfig, sample_batch,
                                        sample_instance, sample_job)
-from repro.scenarios.sweep import (SweepSpec, build_batch, structure_cells,
-                                   sweep_structure, trend_summary)
+from repro.scenarios.sweep import (SweepSpec, build_batch, learned_summary,
+                                   structure_cells, sweep_structure,
+                                   trend_summary)
 
 __all__ = [
     "FAMILIES", "FAMILY_NAMES", "build_dag",
     "FLEETS", "FLEET_NAMES", "build_fleet",
     "ScenarioConfig", "sample_batch", "sample_instance", "sample_job",
     "aligned_shape", "pack_aligned",
-    "SweepSpec", "build_batch", "structure_cells", "sweep_structure",
-    "trend_summary",
+    "SweepSpec", "build_batch", "learned_summary", "structure_cells",
+    "sweep_structure", "trend_summary",
 ]

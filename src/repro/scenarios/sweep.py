@@ -118,7 +118,7 @@ def _batch_eval(batch, start, assign, cum):
     return jax.vmap(evaluate)(batch, start, assign, cum)
 
 
-def sweep_structure(spec: SweepSpec, offline: bool = True
+def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None
                     ) -> tuple[list[dict], dict]:
     """Run the sweep; returns (one aggregate row per cell, meta).
 
@@ -128,6 +128,17 @@ def sweep_structure(spec: SweepSpec, offline: bool = True
     ``offline=False`` skips the SA bound — the dispatch-only path is fully
     deterministic (no jax.random), which is what the golden regression test
     locks.
+
+    ``learn`` (a :class:`repro.learn.LearnConfig`) adds *learned-theta*
+    cells alongside the fixed grid: per (cell, stretch) one gradient-trained
+    gate theta, initialized from the best fixed policy at that stretch and
+    kept only if its hard-dispatch savings beat the init (so a learned cell
+    is ``>=`` its fixed-grid counterpart at equal stretch budget by
+    construction; ``improved`` records whether training moved past the
+    grid).  Rows gain a ``"learned"`` mapping keyed by stretch; the default
+    ``learn=None`` leaves the output bit-identical to before (golden-locked
+    path).  The learned path is deterministic too — no PRNG anywhere in the
+    relaxation or the Adam loop.
     """
     sb = build_batch(spec)
     B = int(sb.cell_of.shape[0])
@@ -170,6 +181,60 @@ def sweep_structure(spec: SweepSpec, offline: bool = True
                                     cfg1=spec.sa, cfg2=spec.sa)
         off_sav = np.asarray(bires.carbon_savings)               # [B]
 
+    learned_by_cell: dict[int, dict] = {}
+    if learn is not None:
+        from repro.learn import evaluate_theta, train_gate   # lazy: optional
+        if learn.machine_rule != "earliest_finish":
+            # The fixed grid above (sweep_policies) and its greedy baseline
+            # are earliest_finish; comparing a differently-ruled learned
+            # policy against them would silently misreport savings.
+            raise ValueError(
+                "sweep_structure(learn=...) compares against the "
+                "earliest_finish fixed grid; train other machine rules "
+                "directly via repro.learn.train_gate")
+        n_cells = len(spec.cells)
+        cell_idx = [np.where(sb.cell_of == ci)[0] for ci in range(n_cells)]
+        # Greedy baseline already dispatched above — reuse it so the learner
+        # doesn't re-run the whole-batch greedy pass per stretch.
+        greedy_ref = (res.greedy_makespan, base.carbon)
+        for sx_val in spec.stretches:
+            # Best fixed policy at this stretch per cell -> the learner's
+            # init (and the fallback if gradient training doesn't improve).
+            pol = np.where(np.isclose(sx, float(sx_val)))[0]
+            theta0 = np.zeros(n_cells, np.float32)
+            window0 = np.zeros(n_cells, np.int32)
+            fixed_best = np.zeros(n_cells)
+            for ci in range(n_cells):
+                psav = sav[np.ix_(cell_idx[ci], pol)].mean(axis=0)
+                j = pol[int(psav.argmax())]
+                theta0[ci], window0[ci] = th[j], wi[j]
+                fixed_best[ci] = psav.max()
+            wins = window0[sb.cell_of]
+            tr = train_gate(sb.batch, sb.intensity, sb.cum, sb.cell_of,
+                            wins, float(sx_val), theta0, cfg=learn,
+                            baseline=greedy_ref)
+            theta_l = np.asarray(tr.theta)
+            s_l, _, _, _ = evaluate_theta(
+                sb.batch, sb.intensity, sb.cum,
+                jnp.asarray(theta_l)[sb.cell_of], wins, float(sx_val),
+                baseline=greedy_ref)
+            s_l = np.asarray(s_l)
+            for ci in range(n_cells):
+                lsav = float(s_l[cell_idx[ci]].mean())
+                improved = lsav > float(fixed_best[ci]) + 1e-12
+                learned_by_cell.setdefault(ci, {})[str(float(sx_val))] = {
+                    "theta": round(float(theta_l[ci] if improved
+                                         else theta0[ci]), 4),
+                    "init_theta": round(float(theta0[ci]), 4),
+                    "window": int(window0[ci]),
+                    "savings_pct": round(
+                        100 * max(lsav, float(fixed_best[ci])), 3),
+                    "trained_savings_pct": round(100 * lsav, 3),
+                    "fixed_best_savings_pct": round(
+                        100 * float(fixed_best[ci]), 3),
+                    "improved": bool(improved),
+                }
+
     rows = []
     for ci, cell in enumerate(spec.cells):
         sel = sb.cell_of == ci
@@ -196,6 +261,8 @@ def sweep_structure(spec: SweepSpec, offline: bool = True
         if offline:
             row["offline_bound_savings_pct"] = round(
                 100 * float(off_sav[sel].mean()), 3)
+        if learn is not None:
+            row["learned"] = learned_by_cell[ci]
         rows.append(row)
 
     meta = {
@@ -214,7 +281,43 @@ def sweep_structure(spec: SweepSpec, offline: bool = True
         "offline": bool(offline),
         "offline_stretch": spec.offline_stretch,
     }
+    if learn is not None:
+        meta["learn"] = dict(learn._asdict())
     return rows, meta
+
+
+def learned_summary(rows: list[dict]) -> tuple[dict, bool]:
+    """Learned vs best-fixed savings per family x stretch.
+
+    Returns ``(summary, acceptance)``: per family and stretch the mean
+    learned and mean best-fixed-grid savings over cells (equal stretch
+    budget by construction — both numbers come from the same budget), plus
+    whether the learned policy is ``>=`` the fixed grid *everywhere* — the
+    acceptance bar ``benchmarks/learned_gate.py`` reports.
+    """
+    fams: dict = {}
+    for r in rows:
+        for sx_key, cell in r.get("learned", {}).items():
+            d = fams.setdefault(r["family"], {}).setdefault(
+                sx_key, {"learned": [], "fixed": [], "improved": 0})
+            d["learned"].append(cell["savings_pct"])
+            d["fixed"].append(cell["fixed_best_savings_pct"])
+            d["improved"] += int(cell["improved"])
+    out: dict = {}
+    ok = True
+    for fam, by_sx in sorted(fams.items()):
+        out[fam] = {}
+        for sx_key, d in sorted(by_sx.items()):
+            lm = float(np.mean(d["learned"]))
+            fm = float(np.mean(d["fixed"]))
+            ok = ok and lm >= fm - 1e-9
+            out[fam][sx_key] = {
+                "learned_savings_pct": round(lm, 3),
+                "fixed_best_savings_pct": round(fm, 3),
+                "improved_cells": int(d["improved"]),
+                "cells": len(d["learned"]),
+            }
+    return out, bool(ok)
 
 
 def trend_summary(rows: list[dict]) -> dict:

@@ -28,8 +28,10 @@ try:
 
     hypothesis.settings.register_profile(
         "dev", max_examples=20, deadline=None)
+    # 100 (was 75): the learn-subsystem property tests (temp->0
+    # bit-exactness, grad-vs-FD) widen the drawn surface — PR 4.
     hypothesis.settings.register_profile(
-        "ci", max_examples=75, deadline=None)
+        "ci", max_examples=100, deadline=None)
     hypothesis.settings.load_profile(os.environ.get(
         "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
 except ModuleNotFoundError:

@@ -1,0 +1,128 @@
+"""Golden regression lock on the gate-policy learner.
+
+A seed-pinned tiny training run (two scenario cells, two instances each,
+40 Adam steps) — everything in the path is deterministic (seeded numpy
+generators, no PRNG in the relaxation/loss/optimizer), so the loss curve,
+the final thetas and the hard-dispatch evaluation of the learned policy
+are all locked:
+
+* **loss / theta curves** at float tolerance (gradient reductions may
+  reassociate across platforms);
+* **hard-eval savings** tighter — the hard dispatch quantizes starts, so
+  a sub-ulp theta drift cannot move them.
+
+If a change legitimately moves these numbers (a different relaxation,
+loss weighting, Adam default), regenerate with
+
+    PYTHONPATH=src python tests/test_learn_golden.py --write
+
+and explain the shift in the PR (same convention as
+``test_structure_golden.py``).
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "learn_tiny.json")
+
+STEPS = 40
+HORIZON = 600
+STRETCH = 1.5
+WINDOW = 48
+THETA0 = 0.5
+
+
+def _tiny_run():
+    import jax.numpy as jnp
+
+    from repro.core import synthesize
+    from repro.learn import LearnConfig, evaluate_theta, train_gate
+    from repro.scenarios import ScenarioConfig, sample_batch
+    from repro.scenarios.batching import pack_aligned
+
+    rng = np.random.default_rng(2024)
+    year = synthesize("AU-SA", days=30, seed=2024)
+    insts, group = [], []
+    families = ("chain", "layered")
+    for gi, fam in enumerate(families):
+        cfg = ScenarioConfig(family=fam, fleet="tiered", n_jobs=3, width=2,
+                             depth=2, n_machines=3)
+        insts += sample_batch(rng, cfg, 2)
+        group += [gi] * 2
+    batch = pack_aligned(insts)
+    intens, cums = [], []
+    for _ in insts:
+        w = year.window(int(rng.integers(0, year.n_epochs - HORIZON)),
+                        HORIZON)
+        intens.append(w.intensity)
+        cums.append(w.cumulative())
+    intens = np.stack(intens)
+    cums = np.stack(cums)
+    group = np.asarray(group)
+    window = np.full(len(insts), WINDOW, np.int32)
+
+    res = train_gate(batch, intens, cums, group, window, STRETCH,
+                     np.full(len(families), THETA0, np.float32),
+                     LearnConfig(steps=STEPS))
+    sav, _, _, _ = evaluate_theta(batch, intens, cums,
+                                  jnp.asarray(res.theta)[group], window,
+                                  STRETCH)
+    sav = np.asarray(sav)
+    return {
+        "families": list(families),
+        "loss_curve": [round(float(v), 6) for v in np.asarray(res.loss_curve)],
+        "final_theta": [round(float(v), 6) for v in np.asarray(res.theta)],
+        "learned_savings_pct": [
+            round(100 * float(sav[group == gi].mean()), 3)
+            for gi in range(len(families))],
+    }
+
+
+def _load_golden():
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden file missing: {GOLDEN_PATH} — regenerate with "
+                    "`PYTHONPATH=src python tests/test_learn_golden.py "
+                    "--write`")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_learn_tiny_matches_golden():
+    golden = _load_golden()["learn_tiny"]
+    got = _tiny_run()
+    assert got["families"] == golden["families"]
+    np.testing.assert_allclose(
+        got["loss_curve"], golden["loss_curve"], rtol=1e-3, atol=2e-4,
+        err_msg="loss_curve")
+    np.testing.assert_allclose(
+        got["final_theta"], golden["final_theta"], rtol=1e-3, atol=2e-3,
+        err_msg="final_theta")
+    # hard dispatch quantizes: these are exact up to rounding in the file
+    np.testing.assert_allclose(
+        got["learned_savings_pct"], golden["learned_savings_pct"],
+        rtol=1e-4, atol=2e-3, err_msg="learned_savings_pct")
+
+
+def _write_golden():
+    record = {
+        "_regenerate": "PYTHONPATH=src python tests/test_learn_golden.py"
+                       " --write",
+        "learn_tiny": _tiny_run(),
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    if "--write" in sys.argv:
+        _write_golden()
+    else:
+        print(__doc__)

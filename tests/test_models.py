@@ -176,9 +176,6 @@ def test_ssd_chunked_matches_sequential():
     assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-4, rtol=2e-4)
 
 
-@pytest.mark.xfail(strict=False,
-                   reason="seed-era failure (pre-existing on the seed "
-                          "checkout) — see ROADMAP.md 'Seed-era failures'")
 def test_ssm_prefill_state_matches_decode_continuation():
     """Prefill's emitted state must continue exactly like step-by-step."""
     cfg = ARCHS["mamba2-370m"].reduced()

@@ -61,10 +61,6 @@ print(json.dumps({"loss0": float(loss0), "loss1": float(loss1),
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(strict=False,
-                   reason="seed-era failure (pre-existing on the seed "
-                          "checkout: jax.shard_map API gap) — see ROADMAP.md "
-                          "'Seed-era failures'")
 def test_moe_train_step_on_8_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -120,3 +120,33 @@ def test_forecast_cum_matches_trace_cumulative():
     _, truth, cum = _case(7)
     np.testing.assert_allclose(np.asarray(forecast_cum(truth)),
                                np.asarray(cum), rtol=2e-5)
+
+
+def test_band_conditioned_theta_slope_zero_is_flat_gate():
+    """slope=0 band gate == rolling_dirty_mask, bit for bit (PR 4 contract).
+
+    The band-conditioned theta profile must collapse to the flat gate when
+    the conditioning slope is zero, for every replan frequency and error
+    scale — the anchor that keeps the forecast-conditioned path honest.
+    A nonzero slope must actually change the mask (the feature is live).
+    """
+    from repro.forecast.rolling import (rolling_band_dirty_mask,
+                                        rolling_dirty_mask)
+    _, truth, _ = _case(3)
+    key = jax.random.key(9)
+    changed = False
+    for every in (24, 48):
+        for scale in (0.0, 0.8):
+            flat = rolling_dirty_mask(truth, jnp.float32(0.4), jnp.int32(48),
+                                      key, jnp.float32(scale), every=every,
+                                      max_window=48)
+            band0 = rolling_band_dirty_mask(
+                truth, jnp.float32(0.4), jnp.float32(0.0), jnp.int32(48),
+                key, jnp.float32(scale), every=every, max_window=48)
+            np.testing.assert_array_equal(np.asarray(flat),
+                                          np.asarray(band0))
+            band1 = rolling_band_dirty_mask(
+                truth, jnp.float32(0.4), jnp.float32(0.4), jnp.int32(48),
+                key, jnp.float32(scale), every=every, max_window=48)
+            changed |= not bool(jnp.array_equal(flat, band1))
+    assert changed, "nonzero slope never changed the gate"
