@@ -27,7 +27,7 @@ import os
 import time
 
 from benchmarks.common import write_csv, write_json
-from benchmarks.structure_sweep import make_spec
+from benchmarks.structure_sweep import check_devices, make_spec
 from repro.learn import LearnConfig
 from repro.scenarios import learned_summary, sweep_structure, trend_summary
 
@@ -57,7 +57,8 @@ def _csv_row(r: dict) -> dict:
 
 def run(tiny: bool = False, steps: int | None = None,
         instances_per_cell: int | None = None, out: str | None = None,
-        seed: int = 2024) -> list[dict]:
+        seed: int = 2024, devices: int | None = None) -> list[dict]:
+    devices = check_devices(devices)
     spec = make_spec(tiny=tiny, instances_per_cell=instances_per_cell,
                      seed=seed)
     cfg = TINY_LEARN if tiny else FULL_LEARN
@@ -65,7 +66,8 @@ def run(tiny: bool = False, steps: int | None = None,
         cfg = cfg._replace(steps=steps)
 
     t0 = time.time()
-    rows, meta = sweep_structure(spec, offline=False, learn=cfg)
+    rows, meta = sweep_structure(spec, offline=False, learn=cfg,
+                                 devices=devices)
     seconds = time.time() - t0
     summary, ok = learned_summary(rows)
 
@@ -85,7 +87,8 @@ def run(tiny: bool = False, steps: int | None = None,
 
     print(f"# learned_gate[{record['mode']}]: {len(rows)} cells x "
           f"{spec.instances_per_cell} instances, {cfg.steps} steps "
-          f"in {seconds:.1f}s — learned >= fixed everywhere: {ok}",
+          f"in {seconds:.1f}s on {meta['devices']} device(s) — "
+          f"learned >= fixed everywhere: {ok}",
           flush=True)
     for fam, by_sx in summary.items():
         for sx, d in by_sx.items():
@@ -115,11 +118,16 @@ def main() -> None:
     ap.add_argument("--instances", type=int, default=None,
                     help="instances per cell (default: grid preset)")
     ap.add_argument("--seed", type=int, default=2024)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the instance axis over N local devices "
+                         "(bit-exact; 'seconds'/'devices' record the "
+                         "sharded wall clock)")
     ap.add_argument("--out", type=str, default=None,
                     help=f"output JSON path (default {BENCH_JSON})")
     args = ap.parse_args()
     run(tiny=args.tiny, steps=args.steps,
-        instances_per_cell=args.instances, out=args.out, seed=args.seed)
+        instances_per_cell=args.instances, out=args.out, seed=args.seed,
+        devices=args.devices)
 
 
 if __name__ == "__main__":

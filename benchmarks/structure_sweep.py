@@ -85,13 +85,27 @@ def make_spec(tiny: bool = False, instances_per_cell: int | None = None,
                      horizon=horizon, sa=sa)
 
 
+def check_devices(devices: int | None) -> int | None:
+    """Validate a ``--devices`` request against the visible platform."""
+    if devices is None:
+        return None
+    import jax
+    if devices > len(jax.devices()):
+        raise SystemExit(
+            f"--devices {devices}: only {len(jax.devices())} local "
+            "device(s) visible — on CPU, force fake devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={devices}")
+    return int(devices)
+
+
 def run(tiny: bool = False, offline: bool = True,
         instances_per_cell: int | None = None, out: str | None = None,
-        seed: int = 2024) -> list[dict]:
+        seed: int = 2024, devices: int | None = None) -> list[dict]:
+    devices = check_devices(devices)
     spec = make_spec(tiny=tiny, instances_per_cell=instances_per_cell,
                      seed=seed)
     t0 = time.time()
-    rows, meta = sweep_structure(spec, offline=offline)
+    rows, meta = sweep_structure(spec, offline=offline, devices=devices)
     seconds = time.time() - t0
 
     trends = trend_summary(rows)
@@ -110,6 +124,7 @@ def run(tiny: bool = False, offline: bool = True,
 
     print(f"# structure_sweep[{record['mode']}]: {len(rows)} cells x "
           f"{spec.instances_per_cell} instances in {seconds:.1f}s "
+          f"on {meta['devices']} device(s) "
           f"(pad T={meta['pad_tasks']}, M={meta['pad_machines']})",
           flush=True)
     for key, series in trends.items():
@@ -132,11 +147,17 @@ def main() -> None:
     ap.add_argument("--instances", type=int, default=None,
                     help="instances per cell (default: grid preset)")
     ap.add_argument("--seed", type=int, default=2024)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the instance axis over N local devices "
+                         "(bit-exact with the single-device sweep; the "
+                         "'seconds'/'devices' columns record the sharded "
+                         "wall clock)")
     ap.add_argument("--out", type=str, default=None,
                     help=f"output JSON path (default {BENCH_JSON})")
     args = ap.parse_args()
     run(tiny=args.tiny, offline=not args.no_offline,
-        instances_per_cell=args.instances, out=args.out, seed=args.seed)
+        instances_per_cell=args.instances, out=args.out, seed=args.seed,
+        devices=args.devices)
 
 
 if __name__ == "__main__":

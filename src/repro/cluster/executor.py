@@ -28,6 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import validate
 from repro.core.instance import EPOCH_HOURS, PackedInstance
 from repro.core.solvers.annealing import SAConfig
 from repro.core.solvers.bilevel import solve_bilevel
@@ -179,7 +180,14 @@ class ClusterExecutor:
                  ) -> tuple[np.ndarray, np.ndarray]:
         """Re-plan the unfinished tasks from epoch ``t`` on live machines:
         completed work is modeled by shrinking remaining durations; dead
-        machines are disallowed."""
+        machines are disallowed.
+
+        Every re-solve is validated in-line through the shared feasibility
+        source (:func:`repro.core.validate.total_violations`, Eqs. 4-8 on
+        the transformed instance) before the executor trusts it — a
+        recovery plan that silently violated precedence or placed work on
+        a dead machine would corrupt the rest of the simulation.
+        """
         inst = self.inst
         dur = np.asarray(inst.dur).copy()
         mask = np.asarray(inst.task_mask)
@@ -201,5 +209,13 @@ class ClusterExecutor:
                             k, objective="carbon", stretch=self.stretch,
                             cfg1=SAConfig(pop=32, iters=40),
                             cfg2=SAConfig(pop=32, iters=40))
-        return (np.asarray(res.optimized.start).astype(np.int64),
-                np.asarray(res.optimized.assign).astype(np.int64))
+        start = np.asarray(res.optimized.start).astype(np.int64)
+        new_assign = np.asarray(res.optimized.assign).astype(np.int64)
+        v = int(validate.total_violations(
+            new_inst, jnp.asarray(start.astype(np.int32)),
+            jnp.asarray(new_assign.astype(np.int32))))
+        if v != 0:
+            raise RuntimeError(
+                f"elastic re-solve at epoch {t} produced an infeasible "
+                f"schedule (violation mass {v}) — refusing to execute it")
+        return start, new_assign

@@ -19,6 +19,18 @@ temperature annealed geometrically from ``temp0`` to ``temp1`` so the
 relaxation tightens toward the hard gate as training converges.
 Everything is deterministic — no PRNG anywhere — which is what the golden
 regression (``tests/test_learn_golden.py``) locks.
+
+Cross-instance reductions are *canonically associated*: the loss and its
+gradient are computed per row (each row's gradient seeded with the exact
+``1/B`` cotangent a batched ``jnp.mean`` backward would emit) and summed
+over rows by an explicitly sequential scan (:func:`seq_sum`) whose
+dependent adds no compiler pass can reassociate.  The floats this produces
+are the point: :func:`repro.shard.train.train_sharded` runs the identical
+per-row program on instance shards, gathers the per-row pieces back into
+row order and applies the same ordered reduction — so sharded training is
+bit-exact with this single-device learner at every device count, instead
+of drifting with XLA's batch-size- and partitioning-dependent reduce
+associations.
 """
 from __future__ import annotations
 
@@ -87,6 +99,90 @@ def greedy_reference(batch: PackedInstance, cum: jnp.ndarray, n_epochs: int,
     return jax.vmap(one)(batch, cum)
 
 
+def seq_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over the leading axis in strict index order.
+
+    A ``lax.scan`` of dependent adds — no compiler pipeline can reassociate
+    it, unlike ``jnp.sum``/``jnp.mean`` whose reduce association varies
+    with batch size and with XLA's manual-partitioning pass.  The canonical
+    cross-row reduction shared by :func:`_train` and
+    :func:`repro.shard.train.train_sharded` (see module docstring).
+    """
+    zero = jnp.zeros(x.shape[1:], x.dtype)
+    return jax.lax.scan(lambda a, v: (a + v, None), zero, x)[0]
+
+
+def per_row_loss(raw, temp, inst, cm, it, sv, n, gid, feat, bud, bc, mn,
+                 inv_b, cfg: LearnConfig, n_epochs: int):
+    """One row's contribution to the training loss.
+
+    Returns the loss term scaled by ``inv_b`` (= ``1/B`` as float32) so
+    that ``jax.grad`` of it seeds the row's backward with exactly the
+    cotangent a batched ``jnp.mean`` would, and the per-row raw pieces
+    ``(carbon, penalty)`` as aux for the value path.
+    """
+    th = jax.nn.sigmoid(raw[gid, 0] + raw[gid, 1] * feat)        # [E]
+    terms = gate_loss(inst, cm, it, sv, n, th, bud, temp, n_epochs,
+                      cfg.straight_through, cfg.machine_rule)
+    loss = terms.carbon / bc + cfg.lam * (terms.penalty / mn)
+    return loss * inv_b, (terms.carbon, terms.penalty)
+
+
+def train_opt_cfg(cfg: LearnConfig) -> AdamWConfig:
+    """The learner's Adam schedule (one definition for both train paths)."""
+    return AdamWConfig(lr=cfg.lr, warmup_steps=max(1, cfg.steps // 10),
+                       total_steps=cfg.steps, min_lr_frac=0.1,
+                       weight_decay=0.0, clip_norm=1.0)
+
+
+def build_train_step(cfg: LearnConfig, opt_cfg: AdamWConfig, n_epochs: int,
+                     inv_b, row_args, reduce_rows, value_norms):
+    """One Adam step of the gate learner — the single copy of the update
+    math shared by :func:`_train` and :func:`repro.shard.train.
+    train_sharded`, so the bit-exact sharded==single-device contract rests
+    on *one* definition rather than twin code.
+
+    ``row_args``: the per-row gradient inputs ``(batch, cum, intensity,
+    sv, n, group_of, feats, budget, bc, mn)`` — full batch on the
+    single-device path, the local row shard under shard_map;
+    ``reduce_rows``: maps per-row arrays to full-batch row order (identity
+    on one device; all_gather + slice-off-padding sharded);
+    ``value_norms``: the full-batch ``(base_c, ms_norm)`` normalizers for
+    the recorded curves.
+    """
+    per_row = functools.partial(per_row_loss, cfg=cfg, n_epochs=n_epochs)
+    per_row_grads = jax.vmap(
+        jax.grad(per_row, has_aux=True),
+        in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))
+    bc_full, mn_full = value_norms
+
+    def step(carry, k):
+        params, state = carry
+        temp = _anneal(cfg, k)
+        g, (c_row, p_row) = per_row_grads(
+            params["raw"], temp, *row_args, inv_b)
+        grads = seq_sum(reduce_rows(g))                 # canonical row order
+        ratio = reduce_rows(c_row) / bc_full
+        pen = reduce_rows(p_row) / mn_full
+        loss = seq_sum(ratio + cfg.lam * pen) * inv_b
+        ratio_m = seq_sum(ratio) * inv_b
+        params, state, _ = adamw_update(params, {"raw": grads}, state,
+                                        opt_cfg)
+        return (params, state), (loss, ratio_m,
+                                 jax.nn.sigmoid(params["raw"][:, 0]))
+
+    return step
+
+
+def run_train_scan(step, raw0, opt_cfg: AdamWConfig, steps: int):
+    """Scan ``step`` over the training steps from a fresh Adam state."""
+    params = {"raw": raw0}
+    state = adamw_init(params, opt_cfg)
+    (params, _), ys = jax.lax.scan(
+        step, (params, state), jnp.arange(steps, dtype=jnp.int32))
+    return params["raw"], ys
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "max_window", "n_epochs"))
 def _train(batch: PackedInstance, intensity, cum, group_of, window, budget,
@@ -96,40 +192,16 @@ def _train(batch: PackedInstance, intensity, cum, group_of, window, budget,
         intensity, window)
     base_c = jnp.maximum(base_carbon, 1e-6)
     ms_norm = jnp.maximum(ms0.astype(jnp.float32), 1.0)
+    inv_b = jnp.float32(1.0) / jnp.float32(int(intensity.shape[0]))
 
-    def loss_fn(raw, temp):
-        base = raw[:, 0][group_of]                    # [B]
-        slope = raw[:, 1][group_of]
-        th = jax.nn.sigmoid(base[:, None] + slope[:, None] * feats)  # [B, E]
-
-        def per_inst(inst, cm, it, s, nn, t, bud):
-            return gate_loss(inst, cm, it, s, nn, t, bud, temp, n_epochs,
-                             cfg.straight_through, cfg.machine_rule)
-
-        terms = jax.vmap(per_inst)(batch, cum, intensity, sv, n, th, budget)
-        ratio = terms.carbon / base_c
-        pen = terms.penalty / ms_norm
-        return jnp.mean(ratio + cfg.lam * pen), jnp.mean(ratio)
-
-    opt_cfg = AdamWConfig(lr=cfg.lr, warmup_steps=max(1, cfg.steps // 10),
-                          total_steps=cfg.steps, min_lr_frac=0.1,
-                          weight_decay=0.0, clip_norm=1.0)
-    params = {"raw": raw0}
-    state = adamw_init(params, opt_cfg)
-
-    def step(carry, k):
-        params, state = carry
-        temp = _anneal(cfg, k)
-        (loss, ratio), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params["raw"], temp)
-        params, state, _ = adamw_update(params, {"raw": grads}, state,
-                                        opt_cfg)
-        return (params, state), (loss, ratio,
-                                 jax.nn.sigmoid(params["raw"][:, 0]))
-
-    (params, _), (losses, ratios, thetas) = jax.lax.scan(
-        step, (params, state), jnp.arange(cfg.steps, dtype=jnp.int32))
-    raw = params["raw"]
+    opt_cfg = train_opt_cfg(cfg)
+    step = build_train_step(
+        cfg, opt_cfg, n_epochs, inv_b,
+        row_args=(batch, cum, intensity, sv, n, group_of, feats, budget,
+                  base_c, ms_norm),
+        reduce_rows=lambda x: x, value_norms=(base_c, ms_norm))
+    raw, (losses, ratios, thetas) = run_train_scan(step, raw0, opt_cfg,
+                                                   cfg.steps)
     return TrainResult(raw=raw, theta=jax.nn.sigmoid(raw[:, 0]),
                        loss_curve=losses, carbon_curve=ratios,
                        theta_curve=thetas)

@@ -30,24 +30,10 @@ from repro.models.common import ArchConfig
 from repro.models.layers import activation, cast
 from repro.models.params import ParamDef
 from repro.models.parallel import ParallelCfg
-
-
-def _shard_map(body, *, mesh, in_specs, out_specs):
-    """``shard_map`` across the JAX API move, replication checks off.
-
-    Newer JAX exposes ``jax.shard_map`` (replication checking via
-    ``check_vma``); older releases only have
-    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  The psum
-    in the EP body makes the output fully replicated either way, but the
-    checker can't prove it through the scatter, so it is disabled under
-    whichever spelling the running JAX accepts.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(body, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=False)
+# The jax.shard_map / jax.experimental.shard_map API bridge lives with the
+# instance-axis sharding layer; the EP psum makes this body's output fully
+# replicated, which the bridge's disabled checker can't prove (see there).
+from repro.shard.compat import shard_map_compat as _shard_map
 
 
 def moe_defs(cfg: ArchConfig) -> dict:

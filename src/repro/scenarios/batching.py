@@ -10,16 +10,26 @@ both axes and stacks:
 * task padding appends masked tasks (``task_mask == False``) that schedule
   instantly and never touch the objectives;
 * machine padding appends never-``allowed`` zero-power machines that no
-  decoder can select.
+  decoder can select;
+* batch padding (:func:`pad_stacked` / ``pack_aligned(pad_batch=...)``)
+  appends whole *inert rows* — instances made entirely of padding tasks —
+  so the batch axis can be padded to a device multiple for
+  :mod:`repro.shard`'s instance-axis sharding.
 
-Both paddings are **inert**: dispatching the padded instance is bit-exact
-with the unpadded one on the real tasks (the padding contract on
-:class:`~repro.core.instance.PackedInstance`, property-tested across all
-families in ``tests/test_scenarios.py``).
+All three paddings are **inert**: dispatching the padded batch is bit-exact
+with the unpadded one on the real tasks and real rows (the padding contract
+on :class:`~repro.core.instance.PackedInstance`; every program that vmaps
+or shard_maps over the batch axis is row-wise independent, so a padded row
+cannot influence a real one — property-tested across all families in
+``tests/test_scenarios.py``).
 """
 from __future__ import annotations
 
 from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
 
 from repro.core.instance import Instance, PackedInstance, pack, stack_packed
 
@@ -34,15 +44,64 @@ def aligned_shape(instances: Sequence[Instance]) -> tuple[int, int]:
 
 def pack_aligned(instances: Sequence[Instance],
                  pad_tasks: int | None = None,
-                 pad_machines: int | None = None) -> PackedInstance:
+                 pad_machines: int | None = None,
+                 pad_batch: int | None = None) -> PackedInstance:
     """Pack mixed-shape instances to one stacked ``[B, ...]`` batch.
 
     ``pad_tasks`` / ``pad_machines`` override the computed maxima (e.g. to
     align several independently built batches to one XLA program shape);
-    they must cover every instance.
+    they must cover every instance.  ``pad_batch`` pads the *batch* axis to
+    the given row count with inert all-padding rows (see
+    :func:`pad_stacked`) — how :mod:`repro.shard` aligns the instance axis
+    to a device multiple.
     """
     T, M = aligned_shape(instances)
     T = max(T, pad_tasks or 0)
     M = max(M, pad_machines or 0)
-    return stack_packed([pack(i, pad_tasks=T, pad_machines=M)
-                         for i in instances])
+    batch = stack_packed([pack(i, pad_tasks=T, pad_machines=M)
+                          for i in instances])
+    if pad_batch is not None:
+        batch = pad_stacked(batch, pad_batch)
+    return batch
+
+
+def padding_rows(rows: int, T: int, M: int) -> PackedInstance:
+    """``rows`` stacked all-padding instances of shape ``(T, M)``.
+
+    Each row follows :func:`repro.core.instance.pack`'s padded-task
+    convention exactly — every task masked out, zero duration, runnable
+    only on machine 0, no dependencies, zero power — so a padding row
+    dispatches instantly and contributes nothing to any objective.
+    """
+    allowed = np.zeros((rows, T, M), dtype=bool)
+    allowed[:, :, 0] = True
+    return PackedInstance(
+        dur=jnp.zeros((rows, T, M), jnp.int32),
+        allowed=jnp.asarray(allowed),
+        pred=jnp.zeros((rows, T, T), bool),
+        arrival=jnp.zeros((rows, T), jnp.int32),
+        job=jnp.zeros((rows, T), jnp.int32),
+        task_mask=jnp.zeros((rows, T), bool),
+        power=jnp.zeros((rows, M), jnp.float32),
+    )
+
+
+def pad_stacked(batch: PackedInstance, rows: int) -> PackedInstance:
+    """Pad a stacked ``[B, ...]`` batch's leading axis to ``rows`` with
+    inert all-padding rows (:func:`padding_rows`).
+
+    The batch-axis padding contract: every consumer of a stacked batch
+    (``vmap`` or ``shard_map`` over the leading axis) treats rows
+    independently, so padded rows can never influence real rows — results
+    on ``[:B]`` are bit-exact with the unpadded batch, and callers simply
+    slice them off (property-tested in ``tests/test_scenarios.py``).
+    """
+    B = batch.dur.shape[0]
+    if rows < B:
+        raise ValueError(f"pad_stacked: rows={rows} < batch size {B}")
+    if rows == B:
+        return batch
+    pad = padding_rows(rows - B, batch.T, batch.M)
+    return PackedInstance(*(jnp.concatenate([getattr(batch, f),
+                                             getattr(pad, f)])
+                            for f in PackedInstance._fields))

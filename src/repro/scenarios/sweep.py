@@ -25,6 +25,7 @@ tiny grid's values.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Sequence
 
 import numpy as np
@@ -118,8 +119,8 @@ def _batch_eval(batch, start, assign, cum):
     return jax.vmap(evaluate)(batch, start, assign, cum)
 
 
-def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None
-                    ) -> tuple[list[dict], dict]:
+def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
+                    devices: int | None = None) -> tuple[list[dict], dict]:
     """Run the sweep; returns (one aggregate row per cell, meta).
 
     Row fields: the cell parameters; greedy-dispatch carbon/makespan/
@@ -139,12 +140,27 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None
     ``learn=None`` leaves the output bit-identical to before (golden-locked
     path).  The learned path is deterministic too — no PRNG anywhere in the
     relaxation or the Adam loop.
+
+    ``devices`` (int, default None == single device) shards the instance
+    axis of every program in the sweep — the gated dispatch, the offline SA
+    bound and the learner — over that many local devices via
+    :mod:`repro.shard`.  Sharded results are **bit-exact** with the
+    single-device sweep (the parity contract ``tests/test_shard.py`` and
+    the sharded golden re-runs lock), so ``devices`` only changes
+    wall-clock, never a number.
     """
+    if devices is not None:
+        from repro.shard import (bilevel_sharded, dispatch_sharded,
+                                 eval_theta_sharded, train_sharded)
     sb = build_batch(spec)
     B = int(sb.cell_of.shape[0])
 
-    res = sweep_policies(sb.batch, sb.intensity, spec.thetas, spec.windows,
-                         spec.stretches)
+    if devices is None:
+        res = sweep_policies(sb.batch, sb.intensity, spec.thetas,
+                             spec.windows, spec.stretches)
+    else:
+        res = dispatch_sharded(sb.batch, sb.intensity, spec.thetas,
+                               spec.windows, spec.stretches, devices=devices)
     mask = np.asarray(sb.batch.task_mask)
     if not (np.asarray(res.greedy.scheduled) | ~mask).all():
         raise AssertionError("greedy dispatch incomplete: raise spec.horizon")
@@ -175,7 +191,13 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None
 
     if offline:
         keys = jax.random.split(jax.random.key(spec.seed), B)
-        bires = solve_bilevel_batch(sb.batch, sb.cum, keys,
+        if devices is None:
+            bires = solve_bilevel_batch(sb.batch, sb.cum, keys,
+                                        objective="carbon",
+                                        stretch=spec.offline_stretch,
+                                        cfg1=spec.sa, cfg2=spec.sa)
+        else:
+            bires = bilevel_sharded(sb.batch, sb.cum, keys, devices=devices,
                                     objective="carbon",
                                     stretch=spec.offline_stretch,
                                     cfg1=spec.sa, cfg2=spec.sa)
@@ -210,11 +232,20 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None
                 theta0[ci], window0[ci] = th[j], wi[j]
                 fixed_best[ci] = psav.max()
             wins = window0[sb.cell_of]
-            tr = train_gate(sb.batch, sb.intensity, sb.cum, sb.cell_of,
-                            wins, float(sx_val), theta0, cfg=learn,
-                            baseline=greedy_ref)
+            if devices is None:
+                tr = train_gate(sb.batch, sb.intensity, sb.cum, sb.cell_of,
+                                wins, float(sx_val), theta0, cfg=learn,
+                                baseline=greedy_ref)
+            else:
+                tr = train_sharded(sb.batch, sb.intensity, sb.cum,
+                                   sb.cell_of, wins, float(sx_val), theta0,
+                                   cfg=learn, baseline=greedy_ref,
+                                   devices=devices)
             theta_l = np.asarray(tr.theta)
-            s_l, _, _, _ = evaluate_theta(
+            eval_fn = (evaluate_theta if devices is None else
+                       functools.partial(eval_theta_sharded,
+                                         devices=devices))
+            s_l, _, _, _ = eval_fn(
                 sb.batch, sb.intensity, sb.cum,
                 jnp.asarray(theta_l)[sb.cell_of], wins, float(sx_val),
                 baseline=greedy_ref)
@@ -280,6 +311,7 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None
         "pad_machines": int(sb.batch.M),
         "offline": bool(offline),
         "offline_stretch": spec.offline_stretch,
+        "devices": int(devices) if devices is not None else 1,
     }
     if learn is not None:
         meta["learn"] = dict(learn._asdict())

@@ -1,0 +1,60 @@
+"""Multi-device sharding of the instance axis.
+
+The paper-scale sweeps — gated online dispatch x policy grids, the offline
+SA bi-level bound, gate-policy training — are embarrassingly parallel over
+*instances*, and every subsystem's ROADMAP next-step named "multi-host
+sharding of the instance axis".  This package is that layer for the
+single-process case: the existing vmapped XLA programs run under
+``shard_map`` over a 1-D device mesh on the instance (or scenario-cell)
+axis, with the batch padded to a device multiple by the inert batch-axis
+padding contract (:mod:`repro.scenarios.batching`).
+
+    compat    — the single ``jax.shard_map`` / ``jax.experimental.
+                shard_map`` API bridge (hoisted from ``models/moe.py``)
+    batch     — the ``"inst"`` device mesh + the generic row-sharded runner
+    dispatch  — ``dispatch_sharded``: the gate-policy sweep
+                (``sweep_policies`` / batched ``online_carbon_gated_jax``)
+    sweep     — ``bilevel_sharded`` (offline SA bound) + ``sweep_sharded``
+                (the whole structure sweep, both programs)
+    train     — ``train_sharded`` / ``eval_theta_sharded``: the learner's
+                scanned Adam loop with canonically-reduced per-row grads
+
+The headline contract, property-tested in ``tests/test_shard.py`` across
+all scenario families x fleets: **sharded output is bit-exact with the
+single-device output, for any device count** — 1, 2, 4 and 8 devices all
+produce identical results, and the tiny golden grids reproduce their
+golden JSONs unchanged when run sharded.
+
+Exports resolve lazily (PEP 562) so that importing the leaf
+``repro.shard.compat`` bridge (as ``models/moe.py`` does) never drags the
+scheduling stack into model imports.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "shard_map_compat": "repro.shard.compat",
+    "AXIS": "repro.shard.batch",
+    "device_count": "repro.shard.batch",
+    "instance_mesh": "repro.shard.batch",
+    "round_up": "repro.shard.batch",
+    "run_rows_sharded": "repro.shard.batch",
+    "dispatch_sharded": "repro.shard.dispatch",
+    "bilevel_sharded": "repro.shard.sweep",
+    "sweep_sharded": "repro.shard.sweep",
+    "greedy_sharded": "repro.shard.train",
+    "train_sharded": "repro.shard.train",
+    "eval_theta_sharded": "repro.shard.train",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.shard' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

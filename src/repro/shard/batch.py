@@ -1,0 +1,117 @@
+"""Instance-axis device mesh + the generic row-sharded runner.
+
+The sweeps this repo runs — batched gated dispatch, the offline bi-level
+bound, gate-policy training — are embarrassingly parallel over the
+*instance* (row) axis of a stacked
+:class:`~repro.core.instance.PackedInstance` batch.  This module owns the
+two pieces every sharded entry point shares:
+
+* :func:`instance_mesh` — a 1-D device mesh over the ``"inst"`` axis;
+* :func:`run_rows_sharded` — run a per-shard program under ``shard_map``
+  with every argument and result sharded on its leading row axis.  The
+  batch is padded to a device multiple with *inert rows*
+  (:func:`repro.scenarios.batching.pad_stacked` — the batch-axis padding
+  contract) and results are sliced back to the real rows.
+
+**Bit-exactness.**  The per-shard program is the same row-wise-independent
+vmapped program the single-device path runs; no collective touches the
+data, each row's floating-point work is identical whatever shard it lands
+on, and padded rows are sliced off before anything consumes them.  Sharded
+output therefore equals single-device output *exactly*, for any device
+count — the parity contract ``tests/test_shard.py`` locks across all
+scenario families x fleets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.instance import PackedInstance
+from repro.scenarios.batching import pad_stacked
+from repro.shard.compat import shard_map_compat
+
+AXIS = "inst"   # the one mesh axis: stacked-instance (batch) rows
+
+
+def device_count() -> int:
+    """Local device count (8 under the CI job's forced-host-device flag)."""
+    return len(jax.devices())
+
+
+def instance_mesh(devices: int | None = None) -> Mesh:
+    """1-D mesh over the first ``devices`` local devices (default: all).
+
+    Raises with the ``XLA_FLAGS`` recipe when more devices are requested
+    than the platform exposes — on CPU, fake devices must be forced before
+    the first jax call: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    avail = jax.devices()
+    n = len(avail) if devices is None else int(devices)
+    if n < 1:
+        raise ValueError(f"instance_mesh: need >= 1 device, got {n}")
+    if n > len(avail):
+        raise ValueError(
+            f"instance_mesh: {n} devices requested but only {len(avail)} "
+            "available — on CPU, force fake devices before jax initializes: "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return Mesh(np.asarray(avail[:n]), (AXIS,))
+
+
+def round_up(rows: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` >= ``rows``."""
+    return -(-rows // multiple) * multiple
+
+
+def _leading_rows(args: Sequence) -> int:
+    if not args:
+        raise ValueError("run_rows_sharded: no arguments")
+    a = args[0]
+    if isinstance(a, PackedInstance):
+        return int(a.dur.shape[0])
+    return int(jnp.asarray(a).shape[0])
+
+
+def _pad_rows(a, rows: int):
+    """Pad one argument's leading axis to ``rows``: inert rows for a
+    PackedInstance, zero rows for plain arrays (padded-row *values* are
+    never consumed — results are sliced to the real rows)."""
+    if isinstance(a, PackedInstance):
+        return pad_stacked(a, rows)
+    a = jnp.asarray(a)
+    if a.shape[0] == rows:
+        return a
+    pad = jnp.zeros((rows - a.shape[0],) + a.shape[1:], a.dtype)
+    return jnp.concatenate([a, pad])
+
+
+@functools.lru_cache(maxsize=512)
+def _sharded_callable(fn: Callable, n_dev: int, n_args: int) -> Callable:
+    """Memoized jitted shard_map of ``fn`` — callers that reuse a per-shard
+    function hit jit's trace cache instead of retracing every call."""
+    mesh = instance_mesh(n_dev)
+    return jax.jit(shard_map_compat(fn, mesh=mesh,
+                                    in_specs=(P(AXIS),) * n_args,
+                                    out_specs=P(AXIS)))
+
+
+def run_rows_sharded(fn: Callable, args: Sequence,
+                     devices: int | None = None):
+    """Run ``fn(*args)`` sharded over the leading row axis of every arg.
+
+    ``fn`` must be a row-wise-independent batched program (a ``vmap`` over
+    the leading axis); every argument — PackedInstance or array — and every
+    output leaf must carry the row axis first.  Rows are padded to a device
+    multiple (inert rows / zero rows), each device runs ``fn`` on its
+    contiguous row shard, and outputs come back sliced to the real rows.
+    """
+    n_dev = int(instance_mesh(devices).size)
+    B = _leading_rows(args)
+    padded = tuple(_pad_rows(a, round_up(B, n_dev)) for a in args)
+    out = _sharded_callable(fn, n_dev, len(padded))(*padded)
+    return jax.tree.map(lambda x: x[:B], out)

@@ -1,0 +1,65 @@
+"""Sharded online dispatch: the policy sweep split over the instance axis.
+
+:func:`dispatch_sharded` is the multi-device twin of
+:func:`repro.core.solvers.online_jax.sweep_policies` (and, with
+single-element policy axes, of a batched
+:func:`~repro.core.solvers.online_jax.online_carbon_gated_jax`): the same
+one-XLA-program gate-policy sweep, with the stacked instance batch sharded
+over a 1-D device mesh.  Policies are replicated — the policy grid is the
+cheap axis (window sorts are shared across thetas/stretches inside each
+row) while instances carry the epoch-scan simulator, so the instance axis
+is the one worth splitting.
+
+Bit-exact with ``sweep_policies`` by construction: each device runs the
+identical per-row program on its row shard, with no collectives (see
+:mod:`repro.shard.batch`).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.instance import PackedInstance
+from repro.core.solvers.online_jax import SweepResult, _sweep
+from repro.shard.batch import run_rows_sharded
+
+
+@functools.lru_cache(maxsize=128)
+def _per_shard_sweep(thetas: tuple, windows: tuple, stretches: tuple,
+                     n_epochs: int, max_window: int, machine_rule: str):
+    """Memoized per-shard sweep closure (stable identity -> jit cache hits
+    in :func:`repro.shard.batch.run_rows_sharded` across repeat calls)."""
+    th = jnp.asarray(thetas, jnp.float32)
+    wi = jnp.asarray(np.asarray(windows, np.int32))
+    sx = jnp.asarray(stretches, jnp.float32)
+
+    def per_shard(b, inten):
+        return _sweep(b, inten, th, wi, sx, n_epochs=n_epochs,
+                      max_window=max_window, machine_rule=machine_rule)
+
+    return per_shard
+
+
+def dispatch_sharded(batch: PackedInstance, intensity, thetas, windows,
+                     stretches, machine_rule: str = "earliest_finish",
+                     devices: int | None = None) -> SweepResult:
+    """``sweep_policies`` with the instance axis sharded over ``devices``.
+
+    Same signature and same (bit-exact) :class:`~repro.core.solvers.
+    online_jax.SweepResult` as the single-device sweep; ``devices=None``
+    uses every local device.  A single-policy call — one theta, one window,
+    one stretch — is the sharded batched equivalent of
+    ``online_carbon_gated_jax`` (``.gated`` squeezed on the policy axis,
+    ``.greedy`` the baseline, ``.budget`` the stretch cap).
+    """
+    intensity = jnp.asarray(intensity)
+    windows_np = np.asarray(windows, np.int32)
+    per_shard = _per_shard_sweep(
+        tuple(float(t) for t in np.asarray(thetas, np.float32)),
+        tuple(int(w) for w in windows_np),
+        tuple(float(s) for s in np.asarray(stretches, np.float32)),
+        int(intensity.shape[-1]), int(windows_np.max()), machine_rule)
+    return run_rows_sharded(per_shard, (batch, intensity), devices=devices)

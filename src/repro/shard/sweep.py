@@ -1,0 +1,82 @@
+"""Sharded structure sweep: both of its XLA programs split over instances.
+
+:func:`~repro.scenarios.sweep.sweep_structure` runs the whole family x
+size x server-count x fleet grid as two XLA programs — the gated online
+dispatch sweep and the offline SA bi-level bound.  This module shards both
+over the instance axis:
+
+* :func:`bilevel_sharded` — :func:`repro.core.solvers.bilevel.
+  solve_bilevel_batch` with rows (instances, traces, PRNG keys) sharded;
+* :func:`sweep_sharded` — the full structure sweep on ``devices`` devices,
+  a thin veneer over ``sweep_structure(devices=...)`` (which routes its
+  dispatch / bound / learn programs through this package), so benchmarks
+  and tests have one sharded front door.
+
+Bit-exact with the single-device sweep: per-row SA chains are driven by
+per-row keys and rows never interact.  Unlike the dispatch/train paths,
+the bound does **not** go through ``shard_map``: XLA's manual-partitioning
+pipeline fuses transcendentals (the ``erf_inv`` behind
+``jax.random.normal``) a vector-ulp differently than the plain jit path,
+and a one-ulp fitness difference can flip a stochastic-search
+accept/reject and diverge the whole SA trajectory.  Instead each device
+runs the *same compiled batched program* on its committed row shard —
+per-device program dispatch, which is asynchronous in JAX, so shards still
+execute concurrently — and the program is batch-size independent
+(``tests/test_shard.py`` locks that parity too).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.instance import PackedInstance
+from repro.core.solvers.bilevel import BilevelResult, solve_bilevel_batch
+from repro.shard.batch import _pad_rows, instance_mesh, round_up
+
+
+def bilevel_sharded(insts: PackedInstance, cums, keys,
+                    devices: int | None = None, **kw) -> BilevelResult:
+    """``solve_bilevel_batch`` with the instance axis sharded.
+
+    ``keys`` is the same ``[B]`` typed-key array the batched solver takes;
+    rows are padded to a device multiple (inert instances, zero keys),
+    each device solves its committed shard of rows with the identical
+    compiled program (see module docstring for why this path dispatches
+    per device instead of shard_mapping), and results come back
+    concatenated in row order, sliced to the real rows.
+    """
+    mesh = instance_mesh(devices)
+    devs = list(mesh.devices.ravel())
+    n_dev = len(devs)
+    B = int(jnp.asarray(cums).shape[0])
+    rows = round_up(B, n_dev)
+    pad = rows - B
+    if pad:
+        kd = jax.random.key_data(keys)
+        keys = jax.random.wrap_key_data(jnp.concatenate(
+            [kd, jnp.zeros((pad,) + kd.shape[1:], kd.dtype)]))
+    insts_p = _pad_rows(insts, rows)
+    cums_p = _pad_rows(cums, rows)
+    per = rows // n_dev
+    shards = []
+    for i, dev in enumerate(devs):
+        sl = slice(i * per, (i + 1) * per)
+        args = jax.tree.map(lambda x: jax.device_put(x[sl], dev),
+                            (insts_p, cums_p, keys))
+        shards.append(solve_bilevel_batch(*args, **kw))   # async, on dev i
+    out = jax.tree.map(lambda *xs: np.concatenate(
+        [np.asarray(x) for x in xs])[:B], *shards)
+    return jax.tree.map(jnp.asarray, out)
+
+
+def sweep_sharded(spec, offline: bool = True, learn=None,
+                  devices: int | None = None):
+    """The full structure sweep, sharded: ``(rows, meta)`` as
+    :func:`~repro.scenarios.sweep.sweep_structure` returns them, bit-exact
+    with the single-device sweep.  ``devices=None`` uses every local
+    device."""
+    from repro.scenarios.sweep import sweep_structure   # lazy: avoids cycle
+    from repro.shard.batch import device_count
+    return sweep_structure(spec, offline=offline, learn=learn,
+                           devices=devices or device_count())

@@ -1,0 +1,196 @@
+"""Sharded gate-policy training: the Adam loop split over instances.
+
+:func:`train_sharded` is the multi-device twin of
+:func:`repro.learn.train.train_gate`: the same single-program ``lax.scan``
+over Adam steps, with the per-instance relaxation work — the expensive
+epoch-scan forward *and* its backward — sharded over the instance axis.
+
+**Bit-exact by canonical reduction.**  Cross-row reductions are where
+naive data parallelism loses exactness: per-device partial sums combined
+by ``psum`` reassociate float additions differently for every device
+count.  This module never psums.  Instead each device computes *per-row*
+loss terms and gradients — each row's gradient seeded with exactly the
+``1/B`` cotangent that ``jnp.mean``'s backward emits, so per-row float
+work matches the single-device fused backward op for op — then
+``all_gather`` reassembles them into original row order on every device,
+padded rows are sliced off, and the final reduction (``sum`` over the row
+axis of a ``[B, G, 2]`` array) runs replicated, in one fixed association,
+identical for 1, 2, 4 or 8 devices.  The gathered arrays are tiny (per-row
+scalars and ``[G, 2]`` grads); the sharded term is the dispatch-sized
+forward/backward, so compute still scales with the mesh.
+
+Parameters, optimizer state and the scan carry are replicated; every
+device runs the identical (deterministic) Adam update, so replication is
+preserved without a collective.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import functools
+
+from repro.core.instance import PackedInstance
+from repro.core.objectives import carbon, makespan
+from repro.core.solvers.online_jax import online_greedy_jax, sorted_windows
+from repro.learn.train import (LearnConfig, TrainResult, _hard_eval,
+                               build_train_step, logit, run_train_scan,
+                               train_opt_cfg)
+from repro.shard.batch import (AXIS, _pad_rows, instance_mesh, round_up,
+                               run_rows_sharded)
+from repro.shard.compat import shard_map_compat
+
+
+@functools.lru_cache(maxsize=128)
+def _per_shard_greedy(n_epochs: int, machine_rule: str):
+    def per_shard(b, cm):
+        def one(inst, c):
+            g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+            return (makespan(inst, g.start, g.assign),
+                    carbon(inst, g.start, g.assign, c))
+        return jax.vmap(one)(b, cm)
+
+    return per_shard
+
+
+@functools.lru_cache(maxsize=128)
+def _per_shard_hard_eval(max_window: int, n_epochs: int, machine_rule: str):
+    def per_shard(b, it, cm, th, wi, bud):
+        return _hard_eval(b, it, cm, th, wi, bud, max_window, n_epochs,
+                          machine_rule)
+
+    return per_shard
+
+
+def greedy_sharded(batch: PackedInstance, cum, n_epochs: int,
+                   machine_rule: str = "earliest_finish",
+                   devices: int | None = None):
+    """Sharded :func:`repro.learn.train.greedy_reference`:
+    per-instance greedy baseline ``(makespan [B], carbon [B])``."""
+    return run_rows_sharded(_per_shard_greedy(n_epochs, machine_rule),
+                            (batch, jnp.asarray(cum)), devices=devices)
+
+
+def _train_sharded(batch, intensity, cum, group_of, window, budget,
+                   base_carbon, ms0, feats, raw0, cfg: LearnConfig,
+                   max_window: int, n_epochs: int,
+                   devices: int | None) -> TrainResult:
+    mesh = instance_mesh(devices)
+    B = int(intensity.shape[0])
+    rows = round_up(B, int(mesh.size))
+    pads = tuple(_pad_rows(a, rows) for a in
+                 (batch, intensity, cum, group_of, window, budget,
+                  base_carbon, ms0, feats))
+    # The exact cotangent jnp.mean's backward seeds every row with.
+    inv_b = jnp.float32(1.0) / jnp.float32(B)
+    opt_cfg = train_opt_cfg(cfg)
+
+    # Full-batch (unpadded, replicated) normalizers for the value path.
+    base_c_full = jnp.maximum(base_carbon, 1e-6)
+    ms_norm_full = jnp.maximum(ms0.astype(jnp.float32), 1.0)
+
+    def gather_rows(x):
+        # Gather per-row pieces into original row order and drop padded
+        # rows — the canonical reduce then runs replicated, with one
+        # association for every device count.
+        return jax.lax.all_gather(x, AXIS, axis=0, tiled=True)[:B]
+
+    def body(b_sh, inten_sh, cum_sh, gid_sh, win_sh, bud_sh, basec_sh,
+             ms0_sh, feats_sh, raw0_rep, basec_rep, msn_rep):
+        sv_sh, n_sh = jax.vmap(lambda i, w: sorted_windows(i, w, max_window))(
+            inten_sh, win_sh)
+        base_c = jnp.maximum(basec_sh, 1e-6)
+        ms_norm = jnp.maximum(ms0_sh.astype(jnp.float32), 1.0)
+
+        # The single shared copy of the update math (learn.train): same
+        # per-row loss, same ordered reductions — only the rows this
+        # device computes differ, and gather_rows puts them back.
+        step = build_train_step(
+            cfg, opt_cfg, n_epochs, inv_b,
+            row_args=(b_sh, cum_sh, inten_sh, sv_sh, n_sh, gid_sh,
+                      feats_sh, bud_sh, base_c, ms_norm),
+            reduce_rows=gather_rows, value_norms=(basec_rep, msn_rep))
+        raw, (losses, ratios, thetas) = run_train_scan(step, raw0_rep,
+                                                       opt_cfg, cfg.steps)
+        return raw, losses, ratios, thetas
+
+    fn = shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(AXIS),) * len(pads) + (P(),) * 3,
+        # Everything returned is replicated: every device holds the full
+        # gathered rows and runs the identical deterministic reduction and
+        # Adam update.
+        out_specs=P())
+    raw, losses, ratios, thetas = jax.jit(fn)(*pads, raw0, base_c_full,
+                                              ms_norm_full)
+    return TrainResult(raw=raw, theta=jax.nn.sigmoid(raw[:, 0]),
+                       loss_curve=losses, carbon_curve=ratios,
+                       theta_curve=thetas)
+
+
+def train_sharded(batch: PackedInstance, intensity, cum, group_of, window,
+                  stretch: float, theta0, cfg: LearnConfig = LearnConfig(),
+                  feats=None, baseline=None,
+                  devices: int | None = None) -> TrainResult:
+    """:func:`repro.learn.train.train_gate` with instances sharded over
+    ``devices`` (default: all local devices).
+
+    Same signature plus ``devices``, same :class:`~repro.learn.train.
+    TrainResult`, bit-exact with the single-device learner — the parity
+    and device-count-invariance contracts ``tests/test_shard.py`` locks.
+    """
+    intensity = jnp.asarray(intensity, jnp.float32)
+    n_epochs = int(intensity.shape[-1])
+    window = np.asarray(window, np.int32)
+    max_window = int(window.max())
+    ms0, base_c = (baseline if baseline is not None else
+                   greedy_sharded(batch, cum, n_epochs, cfg.machine_rule,
+                                  devices=devices))
+    ms0 = jnp.asarray(ms0, jnp.int32)
+    base_c = jnp.asarray(base_c, jnp.float32)
+    budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
+        jnp.int32)
+    theta0 = jnp.asarray(theta0, jnp.float32)
+    raw0 = jnp.stack([logit(theta0), jnp.zeros_like(theta0)], axis=1)
+    if feats is None:
+        feats = jnp.zeros(intensity.shape, jnp.float32)
+    return _train_sharded(batch, intensity, jnp.asarray(cum),
+                          jnp.asarray(group_of), jnp.asarray(window), budget,
+                          base_c, ms0, jnp.asarray(feats, jnp.float32), raw0,
+                          cfg, max_window, n_epochs, devices)
+
+
+def eval_theta_sharded(batch: PackedInstance, intensity, cum, theta, window,
+                       stretch: float,
+                       machine_rule: str = "earliest_finish", baseline=None,
+                       devices: int | None = None):
+    """Sharded :func:`repro.learn.train.evaluate_theta`: hard-dispatch
+    evaluation of learned thetas, instances split over ``devices``.
+    Returns the same ``(savings, gated_carbon, base_carbon, ms_ratio)``
+    per-instance arrays, bit-exact with the single-device evaluation."""
+    intensity = jnp.asarray(intensity, jnp.float32)
+    n_epochs = int(intensity.shape[-1])
+    window = np.asarray(window, np.int32)
+    max_window = int(window.max())
+    ms0, base_c = (baseline if baseline is not None else
+                   greedy_sharded(batch, cum, n_epochs, machine_rule,
+                                  devices=devices))
+    ms0 = jnp.asarray(ms0, jnp.int32)
+    base_c = jnp.asarray(base_c, jnp.float32)
+    budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
+        jnp.int32)
+
+    gated_c, gated_ms, done = run_rows_sharded(
+        _per_shard_hard_eval(max_window, n_epochs, machine_rule),
+        (batch, intensity, jnp.asarray(cum), jnp.asarray(theta, jnp.float32),
+         jnp.asarray(window), budget), devices=devices)
+    if not bool(jnp.all(done)):
+        raise AssertionError(
+            "gated dispatch incomplete at evaluation — raise the horizon")
+    savings = 1.0 - gated_c / jnp.maximum(base_c, 1e-6)
+    ms_ratio = (gated_ms.astype(jnp.float32)
+                / jnp.maximum(ms0.astype(jnp.float32), 1.0))
+    return savings, gated_c, base_c, ms_ratio

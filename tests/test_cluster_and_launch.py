@@ -103,6 +103,30 @@ def test_executor_straggler_speculation(planned):
     assert rep.achieved_makespan < plan["makespan"] * 3
 
 
+def test_executor_rejects_infeasible_resolve(planned, monkeypatch):
+    """Every elastic re-solve is validated in-line through the shared
+    validator (core.validate.total_violations): a solver that hands back
+    an infeasible recovery plan must be caught, not executed."""
+    import types
+
+    import jax.numpy as jnp
+
+    import repro.cluster.executor as exmod
+    from repro.cluster import ClusterExecutor
+
+    ex0, plan = planned
+    # fresh executor: don't mutate the shared fixture's PRNG state
+    ex = ClusterExecutor(ex0.inst, jnp.asarray(ex0.cum), stretch=1.5)
+    T = ex.inst.T
+    # everything at t=0 on machine 0: massive overlap + precedence mass
+    bad = types.SimpleNamespace(optimized=types.SimpleNamespace(
+        start=jnp.zeros((T,), jnp.int32), assign=jnp.zeros((T,), jnp.int32)))
+    monkeypatch.setattr(exmod, "solve_bilevel", lambda *a, **k: bad)
+    with pytest.raises(RuntimeError, match="infeasible"):
+        ex.execute(plan, FaultPlan(fail_machine=2,
+                                   fail_epoch=plan["makespan"] // 4))
+
+
 # ---------------------------------------------------------------------------
 # Launch: sharding rules + HLO analysis.
 # ---------------------------------------------------------------------------

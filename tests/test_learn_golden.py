@@ -19,6 +19,7 @@ loss weighting, Adam default), regenerate with
 and explain the shift in the PR (same convention as
 ``test_structure_golden.py``).
 """
+import functools
 import json
 import os
 import sys
@@ -36,7 +37,12 @@ WINDOW = 48
 THETA0 = 0.5
 
 
-def _tiny_run():
+@functools.lru_cache(maxsize=None)   # golden + sharded tests share one run
+def _tiny_run(devices=None):
+    """The seed-pinned tiny training run; ``devices`` routes training and
+    evaluation through repro.shard (bit-exact with the default
+    single-device path — the sharded golden test locks that).  Cached:
+    callers compare, never mutate."""
     import jax.numpy as jnp
 
     from repro.core import synthesize
@@ -65,12 +71,20 @@ def _tiny_run():
     group = np.asarray(group)
     window = np.full(len(insts), WINDOW, np.int32)
 
-    res = train_gate(batch, intens, cums, group, window, STRETCH,
-                     np.full(len(families), THETA0, np.float32),
-                     LearnConfig(steps=STEPS))
-    sav, _, _, _ = evaluate_theta(batch, intens, cums,
-                                  jnp.asarray(res.theta)[group], window,
-                                  STRETCH)
+    if devices is None:
+        train_fn, eval_fn = train_gate, evaluate_theta
+    else:
+        import functools
+
+        from repro.shard import eval_theta_sharded, train_sharded
+        train_fn = functools.partial(train_sharded, devices=devices)
+        eval_fn = functools.partial(eval_theta_sharded, devices=devices)
+    res = train_fn(batch, intens, cums, group, window, STRETCH,
+                   np.full(len(families), THETA0, np.float32),
+                   LearnConfig(steps=STEPS))
+    sav, _, _, _ = eval_fn(batch, intens, cums,
+                           jnp.asarray(res.theta)[group], window,
+                           STRETCH)
     sav = np.asarray(sav)
     return {
         "families": list(families),
@@ -105,6 +119,32 @@ def test_learn_tiny_matches_golden():
     np.testing.assert_allclose(
         got["learned_savings_pct"], golden["learned_savings_pct"],
         rtol=1e-4, atol=2e-3, err_msg="learned_savings_pct")
+
+
+def test_learn_tiny_sharded_matches_golden():
+    """Golden stability under sharding: the tiny training run through
+    repro.shard (all local devices — 8 under the CI forced-device job) is
+    **bit-exact** with the single-device run, so the stored golden JSON
+    validates it with no ``--write`` regeneration — that is the point of
+    the canonical-reduction training parity contract."""
+    import jax
+
+    golden = _load_golden()["learn_tiny"]
+    got = _tiny_run()
+    got_sharded = _tiny_run(devices=jax.device_count())
+    # bit-exact vs the single-device run, every rounded value identical
+    assert got_sharded == got
+    # and the stored golden still validates the sharded outputs
+    assert got_sharded["families"] == golden["families"]
+    np.testing.assert_allclose(
+        got_sharded["loss_curve"], golden["loss_curve"], rtol=1e-3,
+        atol=2e-4, err_msg="sharded loss_curve")
+    np.testing.assert_allclose(
+        got_sharded["final_theta"], golden["final_theta"], rtol=1e-3,
+        atol=2e-3, err_msg="sharded final_theta")
+    np.testing.assert_allclose(
+        got_sharded["learned_savings_pct"], golden["learned_savings_pct"],
+        rtol=1e-4, atol=2e-3, err_msg="sharded learned_savings_pct")
 
 
 def _write_golden():

@@ -28,6 +28,7 @@ from repro.core.solvers.online_jax import (online_carbon_gated_jax,
 from repro.scenarios import (FAMILY_NAMES, FLEET_NAMES, ScenarioConfig,
                              aligned_shape, build_dag, build_fleet,
                              pack_aligned, sample_instance)
+from repro.scenarios.batching import pad_stacked, padding_rows
 from tests.strategies import (scenario_case, scenario_config,
                               scenario_instance, family_names, fleet_names,
                               seeds, scenario_configs)
@@ -215,6 +216,75 @@ def test_pack_aligned_mixed_batch():
     # overriding with a larger shape aligns independent batches
     b2 = pack_aligned(insts, pad_tasks=T + 3, pad_machines=M + 1)
     assert b2.dur.shape == (len(insts), T + 3, M + 1)
+
+
+def _assert_batch_padding_inert(seeds_, pad_b):
+    """Batch-axis padding contract: pack_aligned(pad_batch=...) appends
+    inert rows — dispatch of the padded batch is bit-exact with the
+    unpadded batch on the real rows (the device-multiple alignment
+    repro.shard relies on)."""
+    insts = [scenario_instance(s, family=FAMILY_NAMES[s % 5],
+                               fleet=FLEET_NAMES[s % 3]) for s in seeds_]
+    B = len(insts)
+    base = pack_aligned(insts)
+    padded = pack_aligned(insts, pad_batch=B + pad_b)
+    assert padded.dur.shape[0] == B + pad_b
+    # padded rows follow the padded-task convention: fully masked, zero
+    # power, machine-0-only
+    pmask = np.asarray(padded.task_mask)
+    assert not pmask[B:].any()
+    assert (np.asarray(padded.power)[B:] == 0.0).all()
+    # real rows are byte-identical to the unpadded stack
+    for f in base._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(base, f)),
+                                      np.asarray(getattr(padded, f))[:B],
+                                      err_msg=f"field {f}")
+
+    inten = np.stack([np.asarray(scenario_case(s, horizon=HORIZON)[1]
+                                 .intensity) for s in seeds_])
+    inten_p = np.concatenate(
+        [inten, np.zeros((pad_b,) + inten.shape[1:], inten.dtype)])
+    res = sweep_policies(base, jnp.asarray(inten), [0.3, 0.5], [48], [1.5])
+    res_p = sweep_policies(padded, jnp.asarray(inten_p), [0.3, 0.5], [48],
+                           [1.5])
+    for got, want, name in (
+            (res_p.greedy, res.greedy, "greedy"),
+            (res_p.gated, res.gated, "gated")):
+        for f in want._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(want, f)),
+                np.asarray(getattr(got, f))[:B], err_msg=f"{name}.{f}")
+    np.testing.assert_array_equal(np.asarray(res.greedy_makespan),
+                                  np.asarray(res_p.greedy_makespan)[:B])
+    np.testing.assert_array_equal(np.asarray(res.budget),
+                                  np.asarray(res_p.budget)[:B])
+    # padded rows dispatch to nothing: all-masked, so "scheduled" is
+    # trivially complete and the validator has nothing to flag
+    v = validate.total_violations_batch(padded, res_p.greedy.start,
+                                        res_p.greedy.assign)
+    assert int(np.asarray(v).sum()) == 0
+
+
+def test_batch_padding_inert_fixed():
+    _assert_batch_padding_inert(list(range(3)), pad_b=5)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=seeds(), pad_b=st.integers(1, 6))
+def test_batch_padding_inert_property(seed, pad_b):
+    _assert_batch_padding_inert([seed, seed + 1], pad_b)
+
+
+def test_pad_stacked_validates_and_noops():
+    insts = [scenario_instance(s) for s in range(2)]
+    b = pack_aligned(insts)
+    assert pad_stacked(b, 2) is b                     # no-op at equal rows
+    with pytest.raises(ValueError, match="rows=1 < batch size"):
+        pad_stacked(b, 1)
+    rows = padding_rows(3, b.T, b.M)
+    assert rows.dur.shape == (3, b.T, b.M)
+    assert not np.asarray(rows.task_mask).any()
+    assert np.asarray(rows.allowed)[:, :, 0].all()
 
 
 def test_stack_packed_rejects_mixed_shapes():

@@ -18,6 +18,7 @@ and explain the shift in the PR.  Tolerances are tight (rtol 1e-4 on
 floats, exact on ints) — they allow float noise across platforms, not
 semantic change.
 """
+import functools
 import json
 import os
 import sys
@@ -38,10 +39,13 @@ EXACT_FIELDS = ("family", "width", "depth", "n_jobs", "n_machines", "fleet",
 SKIP_FIELDS = ("online_best_policy",)
 
 
-def _tiny_rows():
+@functools.lru_cache(maxsize=None)   # golden + sharded tests share one run
+def _tiny_rows(devices=None):
+    """Cached: callers compare the rows, never mutate them."""
     from benchmarks.structure_sweep import make_spec
     from repro.scenarios import sweep_structure
-    rows, meta = sweep_structure(make_spec(tiny=True), offline=False)
+    rows, meta = sweep_structure(make_spec(tiny=True), offline=False,
+                                 devices=devices)
     return rows, meta
 
 
@@ -117,6 +121,31 @@ def test_structure_sweep_tiny_matches_golden():
     assert meta["pad_machines"] == golden["structure_tiny"]["pad_machines"]
     for got, want in zip(rows, want_rows):
         ctx = (f"cell[{want['family']}-m{want['n_machines']}"
+               f"-{want['fleet']}]")
+        _assert_row_matches(got, want, ctx)
+
+
+def test_structure_sweep_tiny_sharded_matches_golden():
+    """Golden stability under sharding: the tiny grid run through
+    repro.shard (all local devices — 8 under the CI forced-device job)
+    reproduces the single-device rows **bit-exactly**, and therefore the
+    stored golden JSON with no ``--write`` regeneration — that is the
+    point of the sharding parity contract."""
+    import jax
+
+    golden = _load_golden()
+    rows, meta = _tiny_rows()
+    rows_sharded, meta_sharded = _tiny_rows(devices=jax.device_count())
+    # bit-exact vs the single-device sweep: every row dict identical,
+    # including every rounded float
+    assert meta_sharded["pad_tasks"] == meta["pad_tasks"]
+    assert meta_sharded["pad_machines"] == meta["pad_machines"]
+    assert rows_sharded == rows
+    # and the stored golden file still validates the sharded rows
+    want_rows = golden["structure_tiny"]["cells"]
+    assert len(rows_sharded) == len(want_rows)
+    for got, want in zip(rows_sharded, want_rows):
+        ctx = (f"sharded cell[{want['family']}-m{want['n_machines']}"
                f"-{want['fleet']}]")
         _assert_row_matches(got, want, ctx)
 
