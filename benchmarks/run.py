@@ -14,8 +14,8 @@ import time
 
 from benchmarks import (fig4_makespan, fig5_stretch, fig6_regions,
                         fig7_carbon_vs_energy, learned_gate,
-                        online_vs_offline, structure_sweep, table1a_servers,
-                        table1b_tasks)
+                        online_vs_offline, stream_serve, structure_sweep,
+                        table1a_servers, table1b_tasks)
 
 BENCHES = {
     "fig4": fig4_makespan.run,
@@ -27,6 +27,7 @@ BENCHES = {
     "online": online_vs_offline.run,   # beyond-paper: price of online
     "structure": structure_sweep.run_harness,  # savings vs DAG structure
     "learned": learned_gate.run_harness,   # learned vs fixed gate thetas
+    "stream": stream_serve.run_harness,    # streaming dispatch under load
 }
 
 

@@ -120,9 +120,31 @@ def synthesize(region: str = "AU-SA", days: int = 366, seed: int = 2024) -> Carb
 
 def from_csv(path: str, name: str = "csv", column: int = 1,
              hourly: bool = True) -> CarbonTrace:
-    """Ingest an Electricity Maps-style CSV export: ``timestamp,intensity``."""
-    vals = np.genfromtxt(path, delimiter=",", skip_header=1, usecols=(column,))
-    vals = vals[np.isfinite(vals)].astype(np.float32)
+    """Ingest an Electricity Maps-style CSV export: ``timestamp,intensity``.
+
+    Real exports have holes (sensor outages parse as NaN).  Dropping those
+    rows would *shift every later hour* on the time grid — a schedule's
+    epoch ``e`` would no longer be the trace's hour ``e/4`` — so interior
+    gaps are filled by linear interpolation on the row grid (the time axis
+    stays aligned) and gaps at the trace edges, which have no anchor to
+    interpolate from, raise instead of being silently invented.
+    """
+    vals = np.atleast_1d(np.genfromtxt(path, delimiter=",", skip_header=1,
+                                       usecols=(column,))).astype(np.float64)
+    finite = np.isfinite(vals)
+    if not finite.any():
+        raise ValueError(f"{path}: no finite intensity values in column "
+                         f"{column}")
+    if not finite.all():
+        idx = np.arange(vals.size)
+        lo, hi = idx[finite][0], idx[finite][-1]
+        if lo != 0 or hi != vals.size - 1:
+            raise ValueError(
+                f"{path}: non-finite values at the trace edges (rows "
+                f"[0, {lo}) / ({hi}, {vals.size})) cannot be interpolated — "
+                "trim the export or fill them upstream")
+        vals[~finite] = np.interp(idx[~finite], idx[finite], vals[finite])
+    vals = vals.astype(np.float32)
     if hourly:
         vals = np.repeat(vals, EPOCHS_PER_HOUR)
     return CarbonTrace(name, vals)
@@ -137,6 +159,12 @@ def constant(value: float, epochs: int, name: str = "const") -> CarbonTrace:
 def sample_window(trace: CarbonTrace, rng: np.random.Generator,
                   horizon: int) -> CarbonTrace:
     """Random start point into a year trace (paper: 'Each instance starts at a
-    random point in the trace')."""
-    start = int(rng.integers(0, max(1, trace.n_epochs - horizon)))
+    random point in the trace').
+
+    Every start with a full in-trace window is reachable: the valid starts
+    are ``0 .. n_epochs - horizon`` *inclusive* (``rng.integers`` has an
+    exclusive upper bound, hence the ``+ 1`` — without it the final window
+    was never sampled).
+    """
+    start = int(rng.integers(0, max(1, trace.n_epochs - horizon + 1)))
     return trace.window(start, horizon)

@@ -75,6 +75,35 @@ class OnlineSchedule(NamedTuple):
     scheduled: jnp.ndarray  # bool  [T] — dispatched within the horizon
 
 
+class DispatchState(NamedTuple):
+    """Progress of the epoch-driven dispatcher on one instance.
+
+    The carry of :func:`simulate_online`'s epoch loop, made first-class so a
+    *streaming* caller (:mod:`repro.stream`) can hold one state per lane and
+    advance the whole pool one epoch at a time with :func:`dispatch_epoch` —
+    inserting and evicting jobs between epochs the way the serve engine
+    inserts and evicts decode lanes between token steps.
+    """
+
+    scheduled: jnp.ndarray  # bool  [T] — placed on a machine
+    comp: jnp.ndarray       # int32 [T] — completion epoch (where scheduled)
+    mfree: jnp.ndarray      # int32 [M] — next epoch each machine is free
+    start: jnp.ndarray      # int32 [T]
+    assign: jnp.ndarray     # int32 [T]
+
+    def schedule(self) -> OnlineSchedule:
+        return OnlineSchedule(self.start, self.assign, self.scheduled)
+
+
+def init_dispatch_state(T: int, M: int) -> DispatchState:
+    """The all-zeros state every simulation starts from (and the inert state
+    a padding lane carries: nothing scheduled, every machine free)."""
+    return DispatchState(jnp.zeros((T,), bool), jnp.zeros((T,), jnp.int32),
+                         jnp.zeros((M,), jnp.int32),
+                         jnp.zeros((T,), jnp.int32),
+                         jnp.zeros((T,), jnp.int32))
+
+
 class SweepResult(NamedTuple):
     """Output of :func:`sweep_policies` (leading axes: B instances, P policies)."""
 
@@ -166,6 +195,74 @@ def dirty_mask(intensity: jnp.ndarray, theta: jnp.ndarray,
     return _quantile_dirty(intensity, sv, n, theta)
 
 
+def dispatch_epoch(inst: PackedInstance, state: DispatchState,
+                   dirty_t: jnp.ndarray, budget: jnp.ndarray, t: jnp.ndarray,
+                   machine_rule: str = "earliest_finish",
+                   cp: jnp.ndarray | None = None,
+                   preds: jnp.ndarray | None = None) -> DispatchState:
+    """One epoch of the online dispatcher — the pool-step entry point.
+
+    Advances ``state`` across epoch ``t``: every task that has arrived, has
+    all predecessors complete, passes the gate (``dirty_t`` False, or waiting
+    would break ``budget``) and finds a free allowed machine is placed.
+    Applying this for ``t = 0 .. n_epochs - 2`` from
+    :func:`init_dispatch_state` reproduces :func:`simulate_online`
+    **bit-exactly** (it *is* that loop's body, hoisted) — which is how the
+    streaming engine (:mod:`repro.stream`) runs one jitted, vmapped step over
+    a whole pool of lanes per tick while inserting/evicting jobs between
+    ticks, and why its closed-batch dispatch matches the batched path.
+
+    ``cp`` (:func:`downstream_critical_path`) and ``preds`` (the masked
+    predecessor matrix) are recomputed from ``inst`` when not supplied;
+    loop-callers pass them in to hoist the computation out of the loop.
+
+    At most ``M`` tasks can be placed per epoch (each placement occupies one
+    machine; machines never free mid-epoch since durations are >= 1), and
+    placements only *shrink* later tasks' options — so M rounds of "place
+    the lowest-indexed eligible task" reproduce the oracle's index-order
+    pass with M instead of T sequential steps.
+    """
+    if machine_rule not in ("earliest_finish", "min_energy"):
+        raise ValueError(f"unknown machine_rule {machine_rule!r}")
+    if cp is None:
+        cp = downstream_critical_path(inst)
+    if preds is None:
+        preds = inst.pred & inst.task_mask[None, :]
+    # Epoch-invariant parts of eligibility: a predecessor placed *this*
+    # epoch completes at t + dur > t, so it blocks successors exactly
+    # like an unscheduled one — blocked needn't be recomputed per round.
+    blocked = jnp.any(preds & (~state.scheduled | (state.comp > t))[None, :],
+                      axis=1)
+    waiting = dirty_t & (t + 1 + cp <= budget)
+    base = (inst.task_mask & (inst.arrival <= t) & ~blocked & ~waiting)
+
+    def round_body(_, carry):
+        scheduled, comp, mfree, start, assign = carry
+        free = inst.allowed & (mfree <= t)[None, :]            # [T, M]
+        elig = base & ~scheduled & jnp.any(free, axis=1)
+        tk = jnp.argmax(elig).astype(jnp.int32)  # lowest eligible index
+        place = elig[tk]
+        durs = inst.dur[tk]
+        cost = inst.power * durs.astype(jnp.float32)
+        if machine_rule == "earliest_finish":
+            dmin = jnp.min(jnp.where(free[tk], durs, BIG))
+            cand = free[tk] & (durs == dmin)
+            m = jnp.argmin(jnp.where(cand, cost, jnp.inf)).astype(jnp.int32)
+        else:  # min_energy
+            cmin = jnp.min(jnp.where(free[tk], cost, jnp.inf))
+            cand = free[tk] & (cost == cmin)
+            m = jnp.argmin(jnp.where(cand, durs, BIG)).astype(jnp.int32)
+        c = t + durs[m]
+        return (scheduled.at[tk].set(scheduled[tk] | place),
+                comp.at[tk].set(jnp.where(place, c, comp[tk])),
+                mfree.at[m].set(jnp.where(place, c, mfree[m])),
+                start.at[tk].set(jnp.where(place, t, start[tk])),
+                assign.at[tk].set(jnp.where(place, m, assign[tk])))
+
+    return DispatchState(*jax.lax.fori_loop(0, inst.M, round_body,
+                                            tuple(state)))
+
+
 @functools.partial(jax.jit, static_argnames=("n_epochs", "machine_rule"))
 def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
                     budget: jnp.ndarray, n_epochs: int,
@@ -182,72 +279,32 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
     ``(power * duration, duration, index)`` under ``"min_energy"`` (the
     ROADMAP's min-energy dispatch; both keys are exact in float32 for the
     menu's quarter-kW powers, so numpy/JAX parity survives the dtype gap).
+
+    The loop body is :func:`dispatch_epoch`; streaming callers apply it one
+    epoch at a time over a lane pool instead.
     """
     if machine_rule not in ("earliest_finish", "min_energy"):
         raise ValueError(f"unknown machine_rule {machine_rule!r}")
-    T, M = inst.T, inst.M
     cp = downstream_critical_path(inst)
     preds = inst.pred & inst.task_mask[None, :]
-
-    # At most M tasks can be placed per epoch (each placement occupies one
-    # machine; machines never free mid-epoch since durations are >= 1), and
-    # placements only *shrink* later tasks' options — so M rounds of "place
-    # the lowest-indexed eligible task" reproduce the oracle's index-order
-    # pass with M instead of T sequential steps.
-    def epoch_body(t, state):
-        dirty_t = dirty[t]
-        scheduled, comp, mfree, start, assign = state
-        # Epoch-invariant parts of eligibility: a predecessor placed *this*
-        # epoch completes at t + dur > t, so it blocks successors exactly
-        # like an unscheduled one — blocked needn't be recomputed per round.
-        blocked = jnp.any(preds & (~scheduled | (comp > t))[None, :], axis=1)
-        waiting = dirty_t & (t + 1 + cp <= budget)
-        base = (inst.task_mask & (inst.arrival <= t) & ~blocked & ~waiting)
-
-        def round_body(_, carry):
-            scheduled, comp, mfree, start, assign = carry
-            free = inst.allowed & (mfree <= t)[None, :]            # [T, M]
-            elig = base & ~scheduled & jnp.any(free, axis=1)
-            tk = jnp.argmax(elig).astype(jnp.int32)  # lowest eligible index
-            place = elig[tk]
-            durs = inst.dur[tk]
-            cost = inst.power * durs.astype(jnp.float32)
-            if machine_rule == "earliest_finish":
-                dmin = jnp.min(jnp.where(free[tk], durs, BIG))
-                cand = free[tk] & (durs == dmin)
-                m = jnp.argmin(jnp.where(cand, cost, jnp.inf)).astype(jnp.int32)
-            else:  # min_energy
-                cmin = jnp.min(jnp.where(free[tk], cost, jnp.inf))
-                cand = free[tk] & (cost == cmin)
-                m = jnp.argmin(jnp.where(cand, durs, BIG)).astype(jnp.int32)
-            c = t + durs[m]
-            return (scheduled.at[tk].set(scheduled[tk] | place),
-                    comp.at[tk].set(jnp.where(place, c, comp[tk])),
-                    mfree.at[m].set(jnp.where(place, c, mfree[m])),
-                    start.at[tk].set(jnp.where(place, t, start[tk])),
-                    assign.at[tk].set(jnp.where(place, m, assign[tk])))
-
-        return jax.lax.fori_loop(0, M, round_body,
-                                 (scheduled, comp, mfree, start, assign))
 
     # Epochs past the last placement are no-ops in the oracle, so a
     # while_loop that exits once every real task is scheduled (vmap masks
     # finished lanes) visits the same epochs 0 .. n_epochs - 2 semantics-wise
     # while skipping the dead tail — the hot-path win for batched sweeps.
     def cond(carry):
-        t, (scheduled, *_rest) = carry
-        return (t < n_epochs - 1) & ~jnp.all(scheduled | ~inst.task_mask)
+        t, state = carry
+        return (t < n_epochs - 1) & ~jnp.all(state.scheduled | ~inst.task_mask)
 
     def body(carry):
         t, state = carry
-        return t + 1, epoch_body(t, state)
+        return t + 1, dispatch_epoch(inst, state, dirty[t], budget, t,
+                                     machine_rule=machine_rule, cp=cp,
+                                     preds=preds)
 
-    init = (jnp.zeros((T,), bool), jnp.zeros((T,), jnp.int32),
-            jnp.zeros((M,), jnp.int32), jnp.zeros((T,), jnp.int32),
-            jnp.zeros((T,), jnp.int32))
-    _, (scheduled, _, _, start, assign) = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), init))
-    return OnlineSchedule(start, assign, scheduled)
+    _, state = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), init_dispatch_state(inst.T, inst.M)))
+    return state.schedule()
 
 
 def online_greedy_jax(inst: PackedInstance, n_epochs: int,

@@ -1,3 +1,4 @@
 from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.lanes import LanePool
 
-__all__ = ["Request", "ServeConfig", "ServeEngine"]
+__all__ = ["LanePool", "Request", "ServeConfig", "ServeEngine"]

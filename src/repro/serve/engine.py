@@ -9,7 +9,21 @@ vLLM-style continuous batching reduced to its JAX-native core.
 
 Greedy and temperature sampling; per-request token logs; deterministic
 given the seed.  The engine is what ``examples/serve_lm.py`` and the
-offline-inference cluster workload drive.
+offline-inference cluster workload drive.  Lane occupancy lives in the
+shared :class:`repro.serve.lanes.LanePool` — the same insert/step/evict
+shape the streaming dispatch engine (:mod:`repro.stream`) reuses for
+scheduling instead of decoding.
+
+Semantics contracts (regression-locked in ``tests/test_serve.py``):
+
+* ``max_new`` counts **decode** tokens; the prefill-sampled continuation
+  token is emitted in addition (``out_tokens`` holds ``1 + max_new`` ids
+  for an un-truncated, non-EOS request);
+* a request evicted at the ``max_len`` KV horizon before reaching
+  ``max_new``/EOS is surfaced with ``truncated=True``, never silently;
+* ``run`` drains the lane pool before returning — unfinished requests come
+  back ``done=False`` *and* their lanes are freed, so back-to-back ``run``
+  calls on one engine never re-serve stale lanes.
 """
 from __future__ import annotations
 
@@ -23,6 +37,7 @@ import numpy as np
 from repro.models.api import Model
 from repro.models.common import ArchConfig
 from repro.models.parallel import ParallelCfg
+from repro.serve.lanes import LanePool
 
 
 @dataclasses.dataclass
@@ -32,6 +47,7 @@ class Request:
     max_new: int = 16
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False            # evicted at the max_len KV horizon
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +70,7 @@ class ServeEngine:
             lambda p, b: model.prefill(p, b, cfg, par))
         self._key = jax.random.key(sc.seed)
         self.caches: dict[str, Any] | None = None
-        self.lane_req: list[Request | None] = [None] * sc.batch_slots
+        self.lanes = LanePool(sc.batch_slots)
         self.lane_pos = np.zeros(sc.batch_slots, np.int32)
 
     # -- cache pool -----------------------------------------------------------
@@ -89,10 +105,7 @@ class ServeEngine:
 
     # -- scheduling -----------------------------------------------------------
     def _admit(self, queue: list[Request]) -> None:
-        for lane in range(self.sc.batch_slots):
-            if self.lane_req[lane] is not None or not queue:
-                continue
-            req = queue.pop(0)
+        for lane, req in self.lanes.admit(queue):
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             if self.cfg.n_encoder_layers:
                 batch["frame_embeds"] = jnp.zeros(
@@ -107,7 +120,6 @@ class ServeEngine:
             self._insert(lane, caches_1, len(req.prompt))
             tok = self._sample(logits)[0]
             req.out_tokens.append(int(tok))
-            self.lane_req[lane] = req
             self.lane_pos[lane] = len(req.prompt)
 
     def _sample(self, logits: jnp.ndarray) -> np.ndarray:
@@ -125,7 +137,7 @@ class ServeEngine:
         done: list[Request] = []
         for _ in range(max_ticks):
             self._admit(queue)
-            active = [l for l, r in enumerate(self.lane_req) if r is not None]
+            active = [l for l, _ in self.lanes.active()]
             if not active:
                 if not queue:
                     break
@@ -133,20 +145,30 @@ class ServeEngine:
             # Pool decode tick: every lane advances one token at its own
             # position (decode_step supports per-lane pos vectors).
             last = jnp.asarray(
-                [r.out_tokens[-1] if r else 0 for r in self.lane_req],
+                [r.out_tokens[-1] if r else 0 for r in self.lanes.payloads()],
                 jnp.int32)[:, None]
             batch = {"token": last, "pos": jnp.asarray(self.lane_pos),
                      **self.caches}
             logits, self.caches = self._decode(self.params, batch)
             toks = self._sample(logits)
             for lane in active:
-                req = self.lane_req[lane]
+                req = self.lanes.payload(lane)
                 req.out_tokens.append(int(toks[lane]))
                 self.lane_pos[lane] += 1
-                n_new = len(req.out_tokens)
-                if (toks[lane] == self.sc.eos_id or n_new >= req.max_new
-                        or self.lane_pos[lane] >= self.sc.max_len - 1):
+                # max_new counts *decode* tokens — the prefill-sampled token
+                # (out_tokens[0]) is in addition, not one of the max_new.
+                n_decode = len(req.out_tokens) - 1
+                finished = (toks[lane] == self.sc.eos_id
+                            or n_decode >= req.max_new)
+                horizon = self.lane_pos[lane] >= self.sc.max_len - 1
+                if finished or horizon:
                     req.done = True
+                    req.truncated = bool(horizon and not finished)
                     done.append(req)
-                    self.lane_req[lane] = None
-        return done + [r for r in self.lane_req if r is not None]
+                    self.lanes.evict(lane)
+        # Drain: whatever is still in flight comes back done=False, but its
+        # lane is freed — a second run() on this engine starts clean instead
+        # of double-serving stale lanes.
+        leftover = self.lanes.drain()
+        self.lane_pos[:] = 0
+        return done + leftover

@@ -1,0 +1,96 @@
+"""Lane-pool bookkeeping for continuous-batching engines.
+
+Both long-running engines in this repo have the same host-side shape: a
+fixed pool of ``n_lanes`` slot lanes whose device arrays stay shape-static,
+a FIFO queue of pending work, one jitted step over the whole pool per tick,
+and insert/evict between ticks.  :class:`LanePool` is that shape hoisted
+out of :class:`repro.serve.engine.ServeEngine` (decode lanes holding
+requests) so :class:`repro.stream.engine.StreamEngine` (dispatch lanes
+holding DAG jobs) reuses it instead of growing a second copy.
+
+The pool tracks *which lane holds which payload* — nothing else.  Device
+state (caches, dispatch progress) stays with the engine; an empty lane's
+device rows are inert by the engine's own padding convention.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+
+class LanePool:
+    """Host-side occupancy of a fixed pool of slot lanes.
+
+    Payloads are arbitrary (a serve ``Request``, a stream job record).
+    ``admit`` fills free lanes from the head of a FIFO queue; ``evict``
+    frees one lane; ``drain`` empties the pool (the end-of-run reset that
+    makes engines re-entrant — see the ``ServeEngine.run`` re-entry fix).
+    """
+
+    def __init__(self, n_lanes: int):
+        if n_lanes < 1:
+            raise ValueError(f"LanePool needs >= 1 lane, got {n_lanes}")
+        self._slots: list[Any] = [None] * n_lanes
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self._slots)
+
+    def payload(self, lane: int) -> Any:
+        """The payload in ``lane`` (None if free)."""
+        return self._slots[lane]
+
+    def payloads(self) -> list[Any]:
+        """All slots in lane order (None where free) — for building per-lane
+        device inputs."""
+        return list(self._slots)
+
+    def free_lanes(self) -> list[int]:
+        return [l for l, s in enumerate(self._slots) if s is None]
+
+    def active(self) -> Iterator[tuple[int, Any]]:
+        """(lane, payload) pairs for occupied lanes, in lane order."""
+        return ((l, s) for l, s in enumerate(self._slots) if s is not None)
+
+    def any_active(self) -> bool:
+        return any(s is not None for s in self._slots)
+
+    def insert(self, lane: int, payload: Any) -> None:
+        if self._slots[lane] is not None:
+            raise ValueError(f"lane {lane} is occupied")
+        if payload is None:
+            raise ValueError("payload must not be None (None marks a free "
+                             "lane)")
+        self._slots[lane] = payload
+
+    def evict(self, lane: int) -> Any:
+        """Free ``lane``, returning its payload."""
+        payload = self._slots[lane]
+        if payload is None:
+            raise ValueError(f"lane {lane} is already free")
+        self._slots[lane] = None
+        return payload
+
+    def admit(self, queue: list, ready: Callable[[Any], bool] | None = None
+              ) -> list[tuple[int, Any]]:
+        """Fill free lanes FIFO from ``queue`` (popped in place).
+
+        ``ready`` (optional) guards the queue head — admission stops at the
+        first item it rejects (a stream job that hasn't *arrived* yet must
+        not jump the FIFO order).  Returns the ``(lane, payload)``
+        placements so the engine can run its per-admission device work
+        (prefill, greedy/budget solve) for exactly the new payloads.
+        """
+        placed: list[tuple[int, Any]] = []
+        for lane in self.free_lanes():
+            if not queue or (ready is not None and not ready(queue[0])):
+                break
+            item = queue.pop(0)
+            self._slots[lane] = item
+            placed.append((lane, item))
+        return placed
+
+    def drain(self) -> list[Any]:
+        """Evict every occupied lane; returns the payloads in lane order."""
+        out = [s for s in self._slots if s is not None]
+        self._slots = [None] * len(self._slots)
+        return out

@@ -1,0 +1,11 @@
+from repro.stream.arrivals import (ARRIVAL_NAMES, ARRIVALS, bursty, diurnal,
+                                   poisson, sample_arrivals)
+from repro.stream.engine import (StreamConfig, StreamEngine, StreamJob,
+                                 StreamResult, event_log, sample_stream_jobs,
+                                 simulate_stream)
+
+__all__ = [
+    "ARRIVALS", "ARRIVAL_NAMES", "poisson", "bursty", "diurnal",
+    "sample_arrivals", "StreamConfig", "StreamEngine", "StreamJob",
+    "StreamResult", "event_log", "sample_stream_jobs", "simulate_stream",
+]

@@ -1,0 +1,457 @@
+"""Streaming dispatch service: continuous DAG arrivals into a lane pool.
+
+The closed-batch machinery (PR 1-5) answers "given these instances at t=0,
+how much carbon can gating save?".  This engine answers the question the
+batch sweeps can't: what happens when delaying one job *back-pressures the
+queue*.  It is :class:`repro.serve.engine.ServeEngine`'s continuous-batching
+shape reused for scheduling instead of decoding:
+
+* a fixed pool of ``n_lanes`` slot lanes, each holding one admitted DAG job
+  packed to a static ``(pad_tasks, n_machines)`` shape (free lanes carry
+  :func:`repro.scenarios.batching.padding_rows`-style inert padding, so the
+  pool arrays never change shape);
+* **one jitted gate-and-dispatch step over the whole pool per tick** —
+  :func:`repro.core.solvers.online_jax.dispatch_epoch` vmapped over lanes,
+  gated by the carbon quantile threshold (day-ahead
+  :func:`~repro.core.solvers.online_jax.dirty_mask`, or forecast-banded via
+  :func:`repro.forecast.rolling.rolling_dirty_mask` when
+  ``forecast_every`` is set);
+* admission runs a second jitted program per job (the scheduling analogue
+  of serve's prefill): a greedy solve fixes the job's stretch budget and
+  its carbon/energy baseline;
+* completed jobs are evicted and their lanes refilled FIFO from the queue
+  (:class:`repro.serve.lanes.LanePool` — the bookkeeping shared with the
+  serve engine).
+
+Each lane is an independent fleet partition (the lanes' machines are
+disjoint), so carbon gating couples jobs only through *lane occupancy*:
+delaying a job keeps its lane busy longer and later arrivals queue — the
+PCAPS-style carbon/latency tension the stream benchmark measures.
+
+Contracts (property- and golden-tested in ``tests/test_stream.py`` /
+``tests/test_stream_golden.py``):
+
+* **closed-batch bit-exactness** — with every arrival at t=0 and enough
+  lanes, each job's dispatch decisions (start/assign/scheduled and the
+  stretch budget) are bit-exact against the batched
+  :func:`~repro.core.solvers.online_jax.online_carbon_gated_jax` path on
+  the same instance, across scenario families x fleets (the engine's tick
+  *is* that simulator's loop body);
+* **determinism** — the whole run is a pure function of the seed: same
+  seed, same event log, replay-locked by a tiny golden;
+* every evicted schedule passes the shared validator
+  (:mod:`repro.core.validate`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import validate
+from repro.core.carbon import CarbonTrace, sample_window, synthesize
+from repro.core.carbon import EPOCHS_PER_DAY
+from repro.core.instance import Instance, Job, PackedInstance, pack
+from repro.core.objectives import evaluate
+from repro.core.solvers.online_jax import (DispatchState, dirty_mask,
+                                           dispatch_epoch,
+                                           downstream_critical_path,
+                                           simulate_online)
+from repro.forecast.rolling import rolling_dirty_mask
+from repro.scenarios.batching import padding_rows
+from repro.scenarios.fleets import build_fleet
+from repro.scenarios.generator import ScenarioConfig, sample_job
+from repro.serve.lanes import LanePool
+from repro.stream.arrivals import sample_arrivals
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """One streaming scenario: traffic shape x job shape x pool x gate."""
+
+    arrivals: str = "poisson"      # arrival family (repro.stream.arrivals)
+    rate: float = 0.05             # mean jobs per epoch
+    horizon: int = 1024            # stream length (epochs)
+    n_lanes: int = 8               # fixed lane-pool size
+    family: str = "layered"        # DAG family of the arriving jobs
+    width: int = 3
+    depth: int = 2
+    n_machines: int = 3            # machines per lane partition
+    fleet: str = "homog"
+    mean_dur: float = 5.0          # exp mean of base task durations
+    theta: float = 0.5             # carbon-gate quantile
+    window: int = 96               # gate look-ahead window (epochs)
+    stretch: float = 1.5           # per-job stretch budget
+    machine_rule: str = "earliest_finish"
+    region: str = "AU-SA"
+    seed: int = 0
+    forecast_every: int | None = None   # None: exact day-ahead gate
+    forecast_scale: float = 1.0
+    forecast_model: str = "oracle_ar1"
+
+    def validate(self) -> "StreamConfig":
+        from repro.stream.arrivals import ARRIVAL_NAMES
+        if self.arrivals not in ARRIVAL_NAMES:
+            raise ValueError(f"unknown arrival family {self.arrivals!r}")
+        if self.n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        return self
+
+
+@dataclasses.dataclass
+class StreamJob:
+    """Host-side per-job record (the stream analogue of serve.Request)."""
+
+    rid: int
+    job: Job                        # job.arrival = stream arrival epoch
+    inst: PackedInstance | None = None   # packed at admission (arrival = t)
+    admitted: int = -1
+    completed: int = -1             # absolute completion epoch
+    budget: int = -1                # absolute stretch deadline
+    greedy_makespan: int = -1       # absolute greedy completion (baseline)
+    greedy_carbon: float = 0.0
+    greedy_energy: float = 0.0
+    carbon: float = 0.0
+    energy: float = 0.0
+    finished: bool = False
+    start: np.ndarray | None = None
+    assign: np.ndarray | None = None
+
+    @property
+    def arrival(self) -> int:
+        return self.job.arrival
+
+    @property
+    def queue_delay(self) -> int:
+        """Epochs spent waiting for a free lane (-1 if never admitted)."""
+        return self.admitted - self.job.arrival if self.admitted >= 0 else -1
+
+    @property
+    def carbon_savings(self) -> float:
+        """1 - gated/greedy carbon (0 when unfinished or zero baseline)."""
+        if not self.finished or self.greedy_carbon <= 0.0:
+            return 0.0
+        return 1.0 - self.carbon / self.greedy_carbon
+
+
+class StreamResult(NamedTuple):
+    jobs: list[StreamJob]          # every stream job, rid order
+    events: list[dict]             # serializable event log (golden-locked)
+    meta: dict
+
+
+# ---------------------------------------------------------------------------
+# Jitted pool programs (module level: engines with equal shapes share them).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_epochs", "machine_rule"))
+def _admission_eval(inst: PackedInstance, cum: jnp.ndarray,
+                    stretch: jnp.ndarray, admitted: jnp.ndarray,
+                    n_epochs: int, machine_rule: str):
+    """Per-job admission solve (the scheduling analogue of serve prefill).
+
+    Greedy-dispatches the job alone on its lane partition to fix the
+    absolute stretch deadline ``admitted + int(stretch * greedy_relative)``
+    and the greedy carbon/energy baseline the savings metric is measured
+    against.  At ``admitted = 0`` the budget arithmetic is bit-identical to
+    :func:`~repro.core.solvers.online_jax.online_carbon_gated_jax`'s
+    (same float32 cast chain) — part of the closed-batch parity contract.
+    """
+    g = simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
+                        n_epochs=n_epochs, machine_rule=machine_rule)
+    obj = evaluate(inst, g.start, g.assign, cum)
+    rel = (obj.makespan - admitted).astype(jnp.float32)
+    budget = admitted + (jnp.float32(stretch) * rel).astype(jnp.int32)
+    complete = jnp.all(g.scheduled | ~inst.task_mask)
+    return downstream_critical_path(inst), budget, obj, complete
+
+
+@functools.partial(jax.jit, static_argnames=("machine_rule",))
+def _pool_tick(pool: PackedInstance, cp: jnp.ndarray, state: DispatchState,
+               dirty: jnp.ndarray, budget: jnp.ndarray, t: jnp.ndarray,
+               machine_rule: str):
+    """ONE gate-and-dispatch step over the whole lane pool — epoch ``t``.
+
+    :func:`dispatch_epoch` vmapped over lanes; all lanes share the global
+    gate bit ``dirty[t]`` and clock ``t``, each lane has its own instance,
+    critical path and budget.  Returns the new pool state plus per-lane
+    "all tasks placed" flags and completion epochs (the eviction signal).
+    """
+    dirty_t = dirty[t]
+    state = jax.vmap(
+        lambda i, c, s, b: dispatch_epoch(i, s, dirty_t, b, t,
+                                          machine_rule=machine_rule, cp=c)
+    )(pool, cp, state, budget)
+    done = jnp.all(state.scheduled | ~pool.task_mask, axis=1)
+    comp = jnp.max(jnp.where(pool.task_mask, state.comp, 0), axis=1)
+    return state, done, comp
+
+
+@jax.jit
+def _insert_lane(pool: PackedInstance, cp: jnp.ndarray, state: DispatchState,
+                 budget: jnp.ndarray, lane: jnp.ndarray,
+                 inst: PackedInstance, job_cp: jnp.ndarray,
+                 job_budget: jnp.ndarray):
+    """Insert one admitted job into ``lane`` (serve's cache insert, for
+    dispatch state): overwrite the lane's instance/cp/budget rows and zero
+    its progress state."""
+    pool = PackedInstance(*(getattr(pool, f).at[lane].set(getattr(inst, f))
+                            for f in PackedInstance._fields))
+    state = DispatchState(*(getattr(state, f).at[lane].set(
+        jnp.zeros_like(getattr(state, f)[lane]))
+        for f in DispatchState._fields))
+    return pool, cp.at[lane].set(job_cp), state, budget.at[lane].set(
+        job_budget)
+
+
+@jax.jit
+def _eval_schedule(inst: PackedInstance, start: jnp.ndarray,
+                   assign: jnp.ndarray, cum: jnp.ndarray):
+    return evaluate(inst, start, assign, cum), \
+        validate.total_violations(inst, start, assign)
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+class StreamEngine:
+    """Long-running lane-pool dispatcher over one carbon trace.
+
+    ``trace`` is the stream's global clock and carbon signal: epoch ``t`` of
+    every lane is epoch ``t`` of the trace.  ``pad_tasks`` fixes the static
+    task axis (jobs must fit); the fleet (``powers_kw``/``speeds``) is the
+    per-lane machine partition.  See the module docstring for semantics and
+    contracts.
+    """
+
+    def __init__(self, trace: CarbonTrace, powers_kw: Sequence[float],
+                 speeds: Sequence[float], n_lanes: int, pad_tasks: int, *,
+                 theta: float = 0.5, window: int = 96, stretch: float = 1.5,
+                 machine_rule: str = "earliest_finish",
+                 forecast_every: int | None = None,
+                 forecast_scale: float = 1.0,
+                 forecast_model: str = "oracle_ar1", seed: int = 0,
+                 validate_evictions: bool = True):
+        if machine_rule not in ("earliest_finish", "min_energy"):
+            raise ValueError(f"unknown machine_rule {machine_rule!r}")
+        self.trace = trace
+        self.powers = tuple(float(p) for p in powers_kw)
+        self.speeds = tuple(float(s) for s in speeds)
+        self.T, self.M = int(pad_tasks), len(self.powers)
+        self.E = trace.n_epochs
+        self.stretch = float(stretch)
+        self.machine_rule = machine_rule
+        self.validate_evictions = bool(validate_evictions)
+        intensity = jnp.asarray(trace.intensity)
+        self.cum = jnp.asarray(trace.cumulative())
+        if forecast_every is None:
+            # Exact day-ahead gate: identical thresholds to the batched path.
+            self.dirty = dirty_mask(intensity, jnp.float32(theta),
+                                    jnp.int32(window),
+                                    max_window=int(window))
+        else:
+            # Forecast-banded gate: thresholds re-quantiled from rolling
+            # imperfect forecasts (scale=0 reproduces the day-ahead gate).
+            self.dirty = rolling_dirty_mask(
+                intensity, jnp.float32(theta), jnp.int32(window),
+                jax.random.key(seed), jnp.float32(forecast_scale),
+                every=int(forecast_every), max_window=int(window),
+                model=forecast_model)
+        self.pool = LanePool(n_lanes)
+        self._reset_pool_state()
+
+    def _reset_pool_state(self) -> None:
+        L, T, M = self.pool.n_lanes, self.T, self.M
+        self.pool_inst = padding_rows(L, T, M)      # inert free lanes
+        self.state = DispatchState(
+            jnp.zeros((L, T), bool), jnp.zeros((L, T), jnp.int32),
+            jnp.zeros((L, M), jnp.int32), jnp.zeros((L, T), jnp.int32),
+            jnp.zeros((L, T), jnp.int32))
+        self.cp = jnp.zeros((L, T), jnp.int32)
+        self.budget = jnp.zeros((L,), jnp.int32)
+        self._done = np.zeros(L, bool)
+        self._comp = np.zeros(L, np.int64)
+
+    # -- admission / eviction -------------------------------------------------
+
+    def _admit_job(self, lane: int, sj: StreamJob, t: int) -> bool:
+        job = dataclasses.replace(sj.job, arrival=t)   # can't start pre-lane
+        inst = pack(Instance(jobs=(job,), powers_kw=self.powers,
+                             speeds=self.speeds), pad_tasks=self.T)
+        cp, budget, obj, complete = _admission_eval(
+            inst, self.cum, jnp.float32(self.stretch), jnp.int32(t),
+            n_epochs=self.E, machine_rule=self.machine_rule)
+        if not bool(complete):
+            # Too late even greedily: reject instead of wedging the lane.
+            # The job surfaces with admitted == -1 / finished == False.
+            return False
+        self.pool_inst, self.cp, self.state, self.budget = _insert_lane(
+            self.pool_inst, self.cp, self.state, self.budget,
+            jnp.int32(lane), inst, cp, budget)
+        sj.inst = inst
+        sj.admitted = t
+        sj.budget = int(budget)
+        sj.greedy_makespan = int(obj.makespan)
+        sj.greedy_carbon = float(obj.carbon)
+        sj.greedy_energy = float(obj.energy)
+        return True
+
+    def _finish(self, lane: int, sj: StreamJob) -> None:
+        self.pool.evict(lane)
+        row = jax.tree.map(lambda x: x[lane], self.state)
+        obj, viol = _eval_schedule(sj.inst, row.start, row.assign, self.cum)
+        if self.validate_evictions and int(viol) != 0:
+            raise AssertionError(
+                f"evicted job rid={sj.rid} has an infeasible schedule "
+                f"(violation mass {int(viol)})")
+        sj.completed = int(self._comp[lane])
+        sj.carbon = float(obj.carbon)
+        sj.energy = float(obj.energy)
+        sj.start = np.asarray(row.start)
+        sj.assign = np.asarray(row.assign)
+        sj.finished = True
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, jobs: Sequence[Job]) -> list[StreamJob]:
+        """Serve a finite stream of jobs; returns one StreamJob per input
+        (rid = input index), finished or flagged ``finished=False``.
+
+        The pool is drained before returning, so back-to-back ``run`` calls
+        on one engine are independent (the serve-engine re-entry contract).
+        """
+        for j in jobs:
+            if j.n_tasks > self.T:
+                raise ValueError(f"job with {j.n_tasks} tasks exceeds "
+                                 f"pad_tasks={self.T}")
+        sjobs = [StreamJob(rid=i, job=j) for i, j in enumerate(jobs)]
+        queue = sorted(sjobs, key=lambda s: (s.job.arrival, s.rid))
+        t = 0
+        while t < self.E - 1:
+            # 1. evict lanes whose job finished executing by epoch t
+            for lane, sj in list(self.pool.active()):
+                if self._done[lane] and self._comp[lane] <= t:
+                    self._finish(lane, sj)
+            # 2. admit arrived jobs FIFO into the freed lanes; jobs too close
+            #    to the trace end to finish even greedily are rejected (they
+            #    surface finished=False rather than wedging a lane)
+            for lane, sj in self.pool.admit(
+                    queue, ready=lambda s: s.job.arrival <= t):
+                if not self._admit_job(lane, sj, t):
+                    self.pool.evict(lane)
+                    sj.admitted = -1
+            # 3. idle fast-forward: empty pool, next arrival in the future
+            if not self.pool.any_active():
+                if not queue:
+                    break
+                t = max(t + 1, int(queue[0].job.arrival))
+                continue
+            # 4. ONE jitted gate-and-dispatch step over the whole pool
+            self.state, done, comp = _pool_tick(
+                self.pool_inst, self.cp, self.state, self.dirty,
+                self.budget, jnp.int32(t), machine_rule=self.machine_rule)
+            self._done, self._comp = np.asarray(done), np.asarray(comp)
+            t += 1
+        # jobs that finished on the final tick
+        for lane, sj in list(self.pool.active()):
+            if self._done[lane] and self._comp[lane] <= t:
+                self._finish(lane, sj)
+        # drain: unfinished jobs surface flagged; the pool resets so the
+        # engine is re-entrant (never re-dispatches stale lanes)
+        self.pool.drain()
+        self._reset_pool_state()
+        return sjobs
+
+
+# ---------------------------------------------------------------------------
+# Scenario-level entry points.
+# ---------------------------------------------------------------------------
+
+def sample_stream_jobs(rng: np.random.Generator,
+                       cfg: StreamConfig) -> list[Job]:
+    """One DAG job per arrival: arrival epochs from the configured arrival
+    family, DAG + durations from the scenario generator's job sampler."""
+    cfg.validate()
+    arrivals = sample_arrivals(cfg.arrivals, rng, cfg.rate, cfg.horizon)
+    scen = ScenarioConfig(family=cfg.family, n_jobs=1, width=cfg.width,
+                          depth=cfg.depth, n_machines=cfg.n_machines,
+                          fleet=cfg.fleet, mean_dur=cfg.mean_dur).validate()
+    return [dataclasses.replace(sample_job(rng, scen), arrival=int(a))
+            for a in arrivals]
+
+
+def event_log(jobs: Sequence[StreamJob]) -> list[dict]:
+    """Serializable per-job event records, rid order — the replay artifact
+    the golden test locks (same seed -> identical log)."""
+    out = []
+    for sj in sorted(jobs, key=lambda s: s.rid):
+        ev = {
+            "rid": sj.rid,
+            "arrival": int(sj.arrival),
+            "admitted": int(sj.admitted),
+            "queue_delay": int(sj.queue_delay),
+            "finished": bool(sj.finished),
+        }
+        if sj.admitted >= 0:
+            ev.update({
+                "budget": int(sj.budget),
+                "greedy_makespan": int(sj.greedy_makespan),
+                "greedy_carbon_g": round(float(sj.greedy_carbon), 3),
+            })
+        if sj.finished:
+            ev.update({
+                "completed": int(sj.completed),
+                "carbon_g": round(float(sj.carbon), 3),
+                "energy_kwh": round(float(sj.energy), 4),
+                "carbon_savings_pct": round(100 * sj.carbon_savings, 3),
+            })
+        out.append(ev)
+    return out
+
+
+def simulate_stream(cfg: StreamConfig,
+                    jobs: Sequence[Job] | None = None) -> StreamResult:
+    """Run one streaming scenario end to end, deterministically.
+
+    Everything derives from ``cfg.seed``: the arrival times, the job DAGs
+    and durations, the fleet, and the carbon window (drawn from a
+    synthesized year through :func:`repro.core.carbon.sample_window` — the
+    path whose off-by-one fix makes the final window reachable).  ``jobs``
+    overrides the sampled stream (the closed-batch parity tests inject
+    arrival-at-0 jobs this way).
+    """
+    cfg.validate()
+    rng = np.random.default_rng(cfg.seed)
+    if jobs is None:
+        jobs = sample_stream_jobs(rng, cfg)
+    powers, speeds = build_fleet(cfg.fleet, rng, cfg.n_machines)
+    # Arrivals land in [0, horizon); the trace runs two days past it so
+    # late arrivals (and stretch-delayed tails) have room to finish.
+    n_epochs = cfg.horizon + 2 * EPOCHS_PER_DAY
+    days = -(-n_epochs // EPOCHS_PER_DAY) + 2
+    year = synthesize(cfg.region, days=days, seed=cfg.seed)
+    trace = sample_window(year, rng, n_epochs)
+    pad_tasks = max((j.n_tasks for j in jobs), default=1)
+    eng = StreamEngine(trace, powers, speeds, cfg.n_lanes, pad_tasks,
+                       theta=cfg.theta, window=cfg.window,
+                       stretch=cfg.stretch, machine_rule=cfg.machine_rule,
+                       forecast_every=cfg.forecast_every,
+                       forecast_scale=cfg.forecast_scale,
+                       forecast_model=cfg.forecast_model, seed=cfg.seed)
+    sjobs = eng.run(jobs)
+    meta = {
+        "config": {k: (v if v is None or isinstance(v, (int, float, str,
+                                                        bool)) else str(v))
+                   for k, v in dataclasses.asdict(cfg).items()},
+        "n_jobs": len(sjobs),
+        "n_finished": sum(sj.finished for sj in sjobs),
+        "pad_tasks": pad_tasks,
+        "n_epochs": trace.n_epochs,
+    }
+    return StreamResult(sjobs, event_log(sjobs), meta)

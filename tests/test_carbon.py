@@ -1,0 +1,94 @@
+"""Carbon-trace ingestion + windowing regressions (this PR's trace fixes).
+
+* ``sample_window`` draws from ``0 .. n_epochs - horizon`` *inclusive* —
+  the final window used to be unreachable (exclusive ``rng.integers``
+  bound without the ``+ 1``), silently biasing every windowed experiment
+  away from the end of its trace;
+* ``from_csv`` keeps the time axis aligned on NaN holes: interior gaps
+  are linearly interpolated (dropping rows would shift every later hour),
+  edge gaps and all-NaN files raise instead of inventing data.
+"""
+import numpy as np
+import pytest
+
+from repro.core.carbon import (EPOCHS_PER_HOUR, CarbonTrace, from_csv,
+                               sample_window)
+
+
+def _arange_trace(n: int) -> CarbonTrace:
+    return CarbonTrace("test", np.arange(n, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sample_window
+# ---------------------------------------------------------------------------
+
+def test_sample_window_last_window_reachable():
+    """n=6, horizon=4: valid starts are 0, 1, 2 — the last window
+    (intensity[2:6]) must actually be drawable."""
+    trace = _arange_trace(6)
+    starts = {int(sample_window(trace, np.random.default_rng(s), 4)
+                  .intensity[0]) for s in range(200)}
+    assert starts == {0, 1, 2}, \
+        f"reachable starts {sorted(starts)} != {{0, 1, 2}}"
+
+
+def test_sample_window_full_trace_window():
+    """horizon == n_epochs: exactly one valid window — the whole trace."""
+    trace = _arange_trace(5)
+    w = sample_window(trace, np.random.default_rng(0), 5)
+    np.testing.assert_array_equal(w.intensity, trace.intensity)
+
+
+def test_sample_window_keeps_horizon_length():
+    trace = _arange_trace(100)
+    for s in range(5):
+        w = sample_window(trace, np.random.default_rng(s), 17)
+        assert w.n_epochs == 17
+        # window content is a contiguous slice of the parent
+        start = int(w.intensity[0])
+        np.testing.assert_array_equal(
+            w.intensity, trace.intensity[start:start + 17])
+
+
+# ---------------------------------------------------------------------------
+# from_csv
+# ---------------------------------------------------------------------------
+
+def _write_csv(tmp_path, rows):
+    p = tmp_path / "trace.csv"
+    p.write_text("timestamp,gco2_per_kwh\n"
+                 + "\n".join(f"t{i},{v}" for i, v in enumerate(rows)) + "\n")
+    return str(p)
+
+
+def test_from_csv_interpolates_interior_nans(tmp_path):
+    """NaN holes are filled in place: the epoch axis stays aligned (hour i
+    is still row i) and the filled values are the linear interpolants."""
+    path = _write_csv(tmp_path, ["100.0", "", "300.0", "nan", "nan",
+                                 "600.0"])
+    trace = from_csv(path)
+    assert trace.n_epochs == 6 * EPOCHS_PER_HOUR, \
+        "rows must be filled, never dropped"
+    hourly = trace.intensity[::EPOCHS_PER_HOUR]
+    np.testing.assert_allclose(
+        hourly, [100.0, 200.0, 300.0, 400.0, 500.0, 600.0], rtol=1e-6)
+
+
+def test_from_csv_clean_file_roundtrip(tmp_path):
+    path = _write_csv(tmp_path, ["10.5", "20.5", "30.5"])
+    trace = from_csv(path)
+    np.testing.assert_allclose(trace.intensity[::EPOCHS_PER_HOUR],
+                               [10.5, 20.5, 30.5], rtol=1e-6)
+    assert trace.n_epochs == 3 * EPOCHS_PER_HOUR
+
+
+def test_from_csv_edge_gap_raises(tmp_path):
+    for rows in (["", "20.0", "30.0"], ["10.0", "20.0", "nan"]):
+        with pytest.raises(ValueError, match="edges"):
+            from_csv(_write_csv(tmp_path, rows))
+
+
+def test_from_csv_all_nan_raises(tmp_path):
+    with pytest.raises(ValueError, match="no finite"):
+        from_csv(_write_csv(tmp_path, ["nan", "", "nan"]))

@@ -1,0 +1,145 @@
+"""ServeEngine semantics regressions (the PR's serve-side bugfixes).
+
+Locks the three contracts the streaming-dispatch work exposed:
+
+* ``max_new`` counts **decode** tokens — a non-EOS, un-truncated request
+  returns ``1 + max_new`` ids (prefill-sampled continuation + max_new
+  decode steps), where the old loop stopped one decode token short;
+* a request hitting the ``max_len`` KV horizon is surfaced with
+  ``truncated=True`` instead of silently coming back short;
+* ``run`` drains the lane pool before returning, so back-to-back ``run``
+  calls on one engine serve fresh requests instead of re-serving stale
+  lanes.
+
+Plus the LanePool unit contracts both engines (serve + stream) sit on.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models.api import build_model
+from repro.models.params import init_params
+from repro.models.parallel import ParallelCfg
+from repro.serve import LanePool, Request, ServeConfig, ServeEngine
+
+PAR = ParallelCfg(mesh=None, remat="none")
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    model = build_model(cfg)
+    params = init_params(jax.random.key(0), model.defs)
+    return model, params, cfg
+
+
+def _reqs(cfg, n, prompt_len=8, max_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, prompt_len).astype(np.int32), max_new=max_new)
+        for i in range(n)]
+
+
+def _engine(lm, **sc):
+    model, params, cfg = lm
+    sc.setdefault("batch_slots", 2)
+    sc.setdefault("max_len", 64)
+    return ServeEngine(model, params, cfg, PAR, ServeConfig(**sc))
+
+
+# ---------------------------------------------------------------------------
+# max_new / truncation semantics.
+# ---------------------------------------------------------------------------
+
+def test_max_new_counts_decode_tokens(lm):
+    """eos_id=-1 never fires, max_len is roomy: every request must come
+    back with exactly 1 + max_new tokens (the prefill-sampled token is in
+    addition to, not part of, the max_new decode budget)."""
+    _, _, cfg = lm
+    eng = _engine(lm)
+    done = eng.run(_reqs(cfg, 3, max_new=5))
+    assert len(done) == 3
+    for r in done:
+        assert r.done and not r.truncated
+        assert len(r.out_tokens) == 1 + r.max_new, \
+            f"rid={r.rid}: {len(r.out_tokens)} tokens != 1 + max_new"
+
+
+def test_max_len_horizon_surfaces_truncation(lm):
+    """A lane hitting the max_len KV horizon before max_new/EOS is evicted
+    with truncated=True — shorter output, never silent."""
+    _, _, cfg = lm
+    eng = _engine(lm, max_len=12)
+    (r,) = eng.run(_reqs(cfg, 1, prompt_len=8, max_new=50))
+    assert r.done and r.truncated
+    assert len(r.out_tokens) < 1 + r.max_new
+
+
+def test_truncated_flag_false_on_exact_finish(lm):
+    """Finishing max_new on the same tick the horizon arrives is a normal
+    finish, not a truncation."""
+    _, _, cfg = lm
+    # pos after prefill = 8; decode ticks at pos 8,9,10 -> horizon at
+    # max_len-1 = 11 coincides with n_decode == max_new == 3
+    eng = _engine(lm, max_len=12)
+    (r,) = eng.run(_reqs(cfg, 1, prompt_len=8, max_new=3))
+    assert r.done and not r.truncated
+    assert len(r.out_tokens) == 1 + r.max_new
+
+
+# ---------------------------------------------------------------------------
+# run() re-entry.
+# ---------------------------------------------------------------------------
+
+def test_run_reentry_serves_fresh_requests(lm):
+    """Second run() on one engine: only its own requests come back, with
+    the same outputs a fresh engine produces (no stale lanes)."""
+    _, _, cfg = lm
+    eng = _engine(lm)
+    a = eng.run(_reqs(cfg, 3, max_new=4, seed=1))
+    b = eng.run(_reqs(cfg, 2, max_new=4, seed=2))
+    assert sorted(r.rid for r in a) == [0, 1, 2]
+    assert sorted(r.rid for r in b) == [0, 1]
+    fresh = _engine(lm).run(_reqs(cfg, 2, max_new=4, seed=2))
+    for got, want in zip(sorted(b, key=lambda r: r.rid),
+                         sorted(fresh, key=lambda r: r.rid)):
+        assert got.out_tokens == want.out_tokens, \
+            "re-entered engine diverged from a fresh engine"
+
+
+def test_run_drains_unfinished_and_stays_reentrant(lm):
+    """max_ticks too small to finish: requests surface done=False, lanes
+    are freed, and the next run() still serves correctly."""
+    _, _, cfg = lm
+    eng = _engine(lm)
+    out = eng.run(_reqs(cfg, 2, max_new=30), max_ticks=3)
+    assert len(out) == 2 and all(not r.done for r in out)
+    again = eng.run(_reqs(cfg, 2, max_new=4))
+    assert all(r.done and len(r.out_tokens) == 5 for r in again)
+
+
+# ---------------------------------------------------------------------------
+# LanePool (the occupancy bookkeeping both engines share).
+# ---------------------------------------------------------------------------
+
+def test_lane_pool_contracts():
+    pool = LanePool(2)
+    assert pool.free_lanes() == [0, 1] and not pool.any_active()
+    queue = ["a", "b", "c"]
+    placed = pool.admit(queue)
+    assert placed == [(0, "a"), (1, "b")] and queue == ["c"]
+    with pytest.raises(ValueError, match="occupied"):
+        pool.insert(0, "x")
+    assert pool.payload(1) == "b"
+    assert pool.evict(0) == "a"
+    with pytest.raises(ValueError, match="already free"):
+        pool.evict(0)
+    # ready-gating: FIFO stops at the first not-ready item
+    assert pool.admit(queue, ready=lambda _: False) == []
+    assert queue == ["c"]
+    assert pool.drain() == ["b"]
+    assert not pool.any_active() and pool.free_lanes() == [0, 1]
+    with pytest.raises(ValueError):
+        LanePool(0)

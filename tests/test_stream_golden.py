@@ -1,0 +1,93 @@
+"""Golden replay lock on the streaming dispatch service.
+
+One tiny seeded stream (bursty arrivals — the shape that exercises queue
+back-pressure) run end to end through ``simulate_stream``; the full
+per-job event log (arrival, admission, queue delay, budget, completion,
+carbon) is locked in ``tests/golden/stream_tiny.json``.  The stream is a
+pure function of its seed, so ANY drift — in the arrival sampler, the job
+generator, the admission solve, the gate thresholds, or the pool tick —
+shows up as a diff here.
+
+If a change legitimately moves the log (new generator defaults, different
+gate semantics), regenerate with
+
+    PYTHONPATH=src python tests/test_stream_golden.py --write
+
+and explain the shift in the PR.  Ints and orderings are compared exactly;
+floats get rtol 1e-4 (platform noise, not semantic change).
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "stream_tiny.json")
+
+EXACT_FIELDS = ("rid", "arrival", "admitted", "queue_delay", "finished",
+                "budget", "greedy_makespan", "completed")
+
+
+def _tiny_config():
+    from repro.stream import StreamConfig
+    return StreamConfig(arrivals="bursty", rate=0.08, horizon=192,
+                        n_lanes=3, family="layered", width=3, depth=2,
+                        n_machines=3, fleet="tiered", mean_dur=5.0,
+                        theta=0.5, window=96, stretch=1.5, seed=2024)
+
+
+def _tiny_run():
+    from repro.stream import simulate_stream
+    res = simulate_stream(_tiny_config())
+    return {"events": res.events,
+            "meta": {k: res.meta[k]
+                     for k in ("n_jobs", "n_finished", "pad_tasks",
+                               "n_epochs")}}
+
+
+def _load_golden():
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden file missing: {GOLDEN_PATH} — regenerate with "
+                    "`PYTHONPATH=src python tests/test_stream_golden.py "
+                    "--write`")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_stream_tiny_matches_golden():
+    golden = _load_golden()
+    got = _tiny_run()
+    assert got["meta"] == golden["meta"], \
+        f"meta drifted: {got['meta']} != {golden['meta']}"
+    want_events = golden["events"]
+    assert len(got["events"]) == len(want_events)
+    for g, w in zip(got["events"], want_events):
+        ctx = f"event[rid={w['rid']}]"
+        assert set(g) == set(w), \
+            f"{ctx}: field set changed {sorted(set(g) ^ set(w))}"
+        for k, wv in w.items():
+            gv = g[k]
+            if k in EXACT_FIELDS:
+                assert gv == wv, f"{ctx}.{k}: {gv!r} != golden {wv!r}"
+            else:
+                np.testing.assert_allclose(
+                    float(gv), float(wv), rtol=1e-4, atol=2e-3,
+                    err_msg=f"{ctx}.{k}")
+
+
+def _write_golden():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    record = _tiny_run()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}: {record['meta']}")
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        _write_golden()
+    else:
+        print(__doc__)
