@@ -16,9 +16,13 @@ on this 1-core container (defaults keep the full ``benchmarks.run`` under
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
+import platform
+import subprocess
 import time
+from typing import Callable
 
 import numpy as np
 
@@ -30,6 +34,8 @@ from repro.core.carbon import CarbonTrace
 from repro.core.instance import Instance
 from repro.core.solvers import solve_bilevel_batch
 from repro.core.solvers.annealing import SAConfig
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
@@ -54,6 +60,208 @@ class BenchSetup:
     seed: int = 2024
 
 
+# ---------------------------------------------------------------------------
+# Benchmark provenance: every write_json-emitted BENCH_*.json is stamped so
+# a number can always be traced back to the code, toolchain and hardware
+# that produced it (the ROADMAP's "tracked, regression-locked quantity").
+# ---------------------------------------------------------------------------
+
+def _git(*args: str) -> str:
+    try:
+        return subprocess.run(
+            ["git", "-C", REPO_ROOT, *args], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return ""
+
+
+def machine_fingerprint() -> dict:
+    """The fields that must match for wall-clock comparisons to mean
+    anything — the perf gate refuses to compare across fingerprints."""
+    dev = jax.devices()[0]
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": str(dev.device_kind),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "machine": platform.machine(),
+    }
+
+
+def provenance() -> dict:
+    """Git SHA, jax/jaxlib versions, device kind/count, timestamp."""
+    import jaxlib
+    return {
+        "git_sha": _git("rev-parse", "HEAD") or "unknown",
+        "git_dirty": bool(_git("status", "--porcelain")),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "python": platform.python_version(),
+        **machine_fingerprint(),
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Timing hygiene: every timed region syncs explicitly (block_until_ready),
+# and cold (compile) is separated from warm medians.  The clock is
+# injectable so the harness itself is unit-testable with a fake clock.
+# ---------------------------------------------------------------------------
+
+class BenchTimer:
+    """Synced timing with an injectable clock (tests fake it)."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+
+    def timed(self, fn: Callable, *args, **kwargs):
+        """``(result, seconds)`` with an explicit device sync inside the
+        timed region — async dispatch can never leak out of the clock."""
+        t0 = self.clock()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        return out, self.clock() - t0
+
+    def cold_warm(self, fn: Callable, *args, warm_reps: int = 3, **kwargs):
+        """One cold call (compile + execute) then ``warm_reps`` warm calls.
+
+        Returns ``(result, timing)`` where timing separates ``compile_s``
+        (the cold call; an upper bound that includes one execution) from
+        the warm median — the quantity the perf gate locks.
+        """
+        out, cold = self.timed(fn, *args, **kwargs)
+        warms = [self.timed(fn, *args, **kwargs)[1]
+                 for _ in range(warm_reps)]
+        return out, {
+            "compile_s": round(cold, 6),
+            "warm_s_median": round(float(np.median(warms)), 6),
+            "warm_s_all": [round(w, 6) for w in warms],
+        }
+
+
+# ---------------------------------------------------------------------------
+# The pinned perf-probe cells.  Tiny, seed-pinned, shape-static programs
+# covering the two hot paths (the dispatch sweep and the gate-learner
+# step), compiled AOT so the probe measures compile and warm wall-clock
+# separately AND captures the compiled program's HLO cost analysis for the
+# achieved-vs-roofline columns.  Every benchmark stamps probe results into
+# its BENCH_*.json; benchmarks/perf_gate.py compares fresh probe warm
+# medians against those stored baselines.
+# ---------------------------------------------------------------------------
+
+PROBE_SEED = 7
+PROBE_HORIZON = 256
+PROBE_WARM_REPS = 7
+
+
+def _probe_batch(n_instances: int = 4):
+    """Pinned instance batch + carbon windows shared by the probe cells."""
+    rng = np.random.default_rng(PROBE_SEED)
+    year = synthesize("AU-SA", days=30, seed=PROBE_SEED)
+    packs, intens, cums = [], [], []
+    for _ in range(n_instances):
+        inst = generate_instance(rng, n_jobs=4, k_tasks=3, n_machines=3)
+        packs.append(pack(inst, pad_tasks=12))
+        w = year.window(int(rng.integers(0, year.n_epochs - PROBE_HORIZON)),
+                        PROBE_HORIZON)
+        intens.append(w.intensity)
+        cums.append(w.cumulative())
+    return (stack_packed(packs), jnp.asarray(np.stack(intens)),
+            jnp.asarray(np.stack(cums)))
+
+
+def _lower_dispatch_probe():
+    from repro.core.solvers.online_jax import _sweep
+    batch, inten, _ = _probe_batch()
+    args = (batch, inten, jnp.asarray([0.3, 0.5], jnp.float32),
+            jnp.asarray([48], jnp.int32),
+            jnp.asarray([1.25, 1.5], jnp.float32))
+    lowered = _sweep.lower(*args, n_epochs=PROBE_HORIZON, max_window=48,
+                           machine_rule="earliest_finish")
+    return lowered, args
+
+
+def _lower_learn_probe():
+    from repro.learn import LearnConfig
+    from repro.learn.train import _train, greedy_reference
+    batch, inten, cum = _probe_batch()
+    B = int(inten.shape[0])
+    ms0, base_c = greedy_reference(batch, cum, PROBE_HORIZON,
+                                   "earliest_finish")
+    budget = (jnp.float32(1.5) * ms0.astype(jnp.float32)).astype(jnp.int32)
+    theta0 = jnp.asarray([0.5], jnp.float32)
+    raw0 = jnp.stack([jnp.log(theta0 / (1 - theta0)),
+                      jnp.zeros_like(theta0)], axis=1)
+    args = (batch, inten, cum, jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), 48, jnp.int32), budget, base_c, ms0,
+            jnp.zeros(inten.shape, jnp.float32), raw0)
+    lowered = _train.lower(*args, cfg=LearnConfig(steps=4), max_window=48,
+                           n_epochs=PROBE_HORIZON)
+    return lowered, args
+
+
+PROBE_CELLS = {
+    "dispatch_sweep": _lower_dispatch_probe,
+    "learn_step": _lower_learn_probe,
+}
+
+
+def _probe_cell(build: Callable, timer: BenchTimer) -> dict:
+    from repro.launch.hlo_analysis import cost_dict, memory_dict
+    from repro.launch.roofline import achieved_vs_roofline
+    lowered, args = build()
+    t0 = timer.clock()
+    compiled = lowered.compile()
+    compile_s = timer.clock() - t0
+    warms = [timer.timed(compiled, *args)[1]
+             for _ in range(PROBE_WARM_REPS)]
+    warm_median = float(np.median(warms))
+    cost = cost_dict(compiled)
+    return {
+        "compile_s": round(compile_s, 6),
+        # warm_s_min is the gate quantity (noise-robust on shared hosts:
+        # the best rep is the program's floor, medians carry OS jitter);
+        # the median/all columns stay for reading run-to-run variance.
+        "warm_s_min": round(float(np.min(warms)), 6),
+        "warm_s_median": round(warm_median, 6),
+        "warm_s_all": [round(w, 6) for w in warms],
+        "roofline": achieved_vs_roofline(cost, warm_median),
+        "memory": memory_dict(compiled),
+    }
+
+
+@functools.lru_cache(maxsize=1)
+def _cached_probe() -> dict:
+    timer = BenchTimer()
+    return {
+        "cells": {name: _probe_cell(build, timer)
+                  for name, build in PROBE_CELLS.items()},
+        "warm_reps": PROBE_WARM_REPS,
+        "fingerprint": machine_fingerprint(),
+    }
+
+
+def perf_probe(fresh: bool = False) -> dict:
+    """Compile + time the pinned probe cells (cached per process).
+
+    AOT compile is timed apart from ``PROBE_WARM_REPS`` synced warm calls,
+    and each cell carries the compiled program's achieved-vs-roofline
+    record.  This dict is what benchmarks stamp under ``timing.probe`` and
+    what ``benchmarks/perf_gate.py`` compares against stored baselines.
+    """
+    if fresh:
+        _cached_probe.cache_clear()
+    return json.loads(json.dumps(_cached_probe()))   # defensive copy
+
+
+def bench_timing(wall_s: float, probe: bool = True) -> dict:
+    """The standard ``timing`` block for a BENCH_*.json record."""
+    out = {"wall_s": round(float(wall_s), 3)}
+    if probe:
+        out["probe"] = perf_probe()
+    return out
+
+
 def run_batch(setup: BenchSetup) -> dict:
     """Solve ``setup.instances`` instances; returns aggregate metrics."""
     rng = np.random.default_rng(setup.seed)
@@ -73,12 +281,12 @@ def run_batch(setup: BenchSetup) -> dict:
     cum = jnp.stack(cums)
     keys = jax.random.split(jax.random.key(setup.seed), setup.instances)
 
-    t0 = time.time()
-    res = solve_bilevel_batch(
-        batch, cum, keys, objective=setup.objective,
+    # Explicit sync inside the timed region (async dispatch must not leak
+    # past the clock); host-side np conversion happens after it stops.
+    res, dt = BenchTimer().timed(
+        solve_bilevel_batch, batch, cum, keys, objective=setup.objective,
         stretch=setup.stretch, cfg1=SA_FAST, cfg2=SA_FAST)
     res = jax.tree.map(np.asarray, res)
-    dt = time.time() - t0
 
     return {
         "setup": setup,
@@ -109,7 +317,14 @@ def summarize(r: dict) -> dict:
 
 
 def write_json(path: str, record: dict) -> str:
-    """Write a benchmark record as pretty JSON (e.g. BENCH_online.json)."""
+    """Write a benchmark record as pretty JSON (e.g. BENCH_online.json).
+
+    Every record is stamped with :func:`provenance` (git SHA, jax/jaxlib,
+    device kind/count) unless the caller already provided one — no
+    BENCH_*.json leaves the harness untraceable.
+    """
+    if "provenance" not in record:
+        record = {**record, "provenance": provenance()}
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)

@@ -38,7 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import write_json
+from benchmarks.common import bench_timing, write_json
 from repro.core import generate_instance, pack, stack_packed, synthesize, validate
 from repro.core.objectives import evaluate, makespan
 from repro.core.solvers import solve_bilevel_batch
@@ -226,6 +226,7 @@ def run(instances: int = 8, seeds: int = 3, horizon: int = 512,
         "cells": cells,
         "rolling_vs_day_ahead_ok": bool(all_ok),
         "seconds": round(time.time() - t_start, 1),
+        "timing": bench_timing(time.time() - t_start),
     }
     write_json(out, record)
     if not all_ok:

@@ -26,7 +26,7 @@ import argparse
 import os
 import time
 
-from benchmarks.common import write_csv, write_json
+from benchmarks.common import bench_timing, write_csv, write_json
 from benchmarks.structure_sweep import check_devices, make_spec
 from repro.learn import LearnConfig
 from repro.scenarios import learned_summary, sweep_structure, trend_summary
@@ -75,6 +75,7 @@ def run(tiny: bool = False, steps: int | None = None,
         "bench": "learned_gate",
         "mode": "tiny" if tiny else "full",
         "seconds": round(seconds, 3),
+        "timing": bench_timing(seconds),
         **meta,
         "summary_by_family": summary,
         "acceptance": {"learned_ge_fixed_everywhere": ok},

@@ -27,7 +27,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import BenchSetup, SA_FAST, write_csv, write_json
+from benchmarks.common import (BenchSetup, SA_FAST, bench_timing, write_csv,
+                               write_json)
 from repro.core import generate_instance, pack, stack_packed, synthesize, validate
 from repro.core.objectives import evaluate
 from repro.core.solvers import solve_bilevel_batch
@@ -168,6 +169,7 @@ def run(instances: int = 16) -> list[dict]:
         "numpy_seconds": round(np_seconds, 3),
         "jax_seconds_warm": round(jax_warm, 3),
         "jax_seconds_with_compile": round(jax_cold, 3),
+        "timing": bench_timing(jax_cold + jax_warm + np_seconds),
         "speedup_warm": round(np_seconds / jax_warm, 1),
         "speedup_with_compile": round(np_seconds / jax_cold, 1),
         "oracle_matches": matches,

@@ -1,0 +1,222 @@
+"""CI perf-regression gate over the pinned probe cells.
+
+Raw speed was asserted exactly once (PR 1's ~14x); this gate makes it a
+tracked, regression-locked quantity.  It re-times the pinned probe cells
+(``benchmarks.common.perf_probe``: the dispatch-sweep and gate-learner
+programs, AOT-compiled, warm medians over synced reps) and compares each
+cell's warm wall-clock against the ``timing.probe`` blocks stored in
+BENCH_*.json baselines.  A warm median more than ``--tolerance`` (default
+30%) above a comparable baseline fails the gate (exit 1).
+
+Wall clocks only compare on like hardware, so every probe carries a
+machine fingerprint (backend, device kind/count, cpu count); baselines
+with a different fingerprint are *skipped with a message*, never compared
+(``--cross-machine`` overrides).  No comparable baseline at all is the
+clear skip path: exit 0 with an explanation, so fresh checkouts and new
+CI runners are never blocked.
+
+    python -m benchmarks.perf_gate                       # gate vs BENCH_*.json
+    python -m benchmarks.perf_gate --write-baseline      # refresh BENCH_perf.json
+    python -m benchmarks.perf_gate --check-provenance 'bench-artifacts/*.json'
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import (REPO_ROOT, bench_timing, machine_fingerprint,
+                               perf_probe, write_json)
+
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_perf.json")
+DEFAULT_TOLERANCE = 0.30
+
+# Provenance fields every BENCH_*.json must carry post-harness (the CI
+# artifact check); timing.probe is only required of records that ran the
+# probe (a "timing" block present implies it).
+REQUIRED_PROVENANCE = ("git_sha", "jax", "jaxlib", "backend", "device_kind",
+                       "device_count")
+
+
+def extract_probe(record: dict) -> dict | None:
+    """The ``timing.probe`` block of a benchmark record (None if absent —
+    pre-telemetry BENCH files are skipped, not errors)."""
+    probe = record.get("timing", {}).get("probe")
+    if probe and "cells" in probe:
+        return probe
+    return None
+
+
+def load_baselines(patterns: list[str]) -> list[tuple[str, dict]]:
+    """(path, probe) for every matched JSON that carries probe timing."""
+    out = []
+    for pattern in patterns:
+        for path in sorted(glob.glob(pattern)):
+            try:
+                with open(path) as f:
+                    record = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            probe = extract_probe(record)
+            if probe is not None:
+                out.append((path, probe))
+    return out
+
+
+def _warm(cell: dict) -> float:
+    """The gate quantity: best warm rep (noise floor); median for records
+    written before ``warm_s_min`` existed."""
+    return cell.get("warm_s_min", cell.get("warm_s_median"))
+
+
+def gate_verdict(current: dict, baselines: list[tuple[str, dict]],
+                 tolerance: float = DEFAULT_TOLERANCE,
+                 cross_machine: bool = False) -> dict:
+    """Pure comparison (unit-tested with fake probes — no timing runs).
+
+    For each probe cell, the baseline warm median is the *minimum* across
+    comparable stored baselines (the best this machine has ever recorded —
+    a monotone target that ratchets as BENCH files regenerate).  Verdict:
+    ``ok`` unless any cell regressed past tolerance; ``skipped`` carries
+    the per-file reasons when nothing was comparable.
+    """
+    fp = current["fingerprint"]
+    comparable, skipped = [], []
+    for path, base in baselines:
+        if not cross_machine and base.get("fingerprint") != fp:
+            skipped.append((path, "machine fingerprint differs"))
+            continue
+        comparable.append((path, base))
+    rows = []
+    for cell, cur in sorted(current["cells"].items()):
+        best, src = None, None
+        for path, base in comparable:
+            b = base["cells"].get(cell)
+            if b is None:
+                continue
+            w = _warm(b)
+            if best is None or w < best:
+                best, src = w, path
+        if best is None:
+            continue
+        ratio = _warm(cur) / max(best, 1e-12)
+        rows.append({"cell": cell, "warm_s": _warm(cur),
+                     "baseline_warm_s": best, "baseline_from": src,
+                     "ratio": round(ratio, 3),
+                     "ok": ratio <= 1.0 + tolerance})
+    return {
+        "ok": all(r["ok"] for r in rows),
+        "compared": rows,
+        "skipped": [{"path": p, "reason": r} for p, r in skipped],
+        "tolerance": tolerance,
+        "fingerprint": fp,
+    }
+
+
+def check_provenance(patterns: list[str]) -> list[str]:
+    """Missing-field report for the CI artifact check (empty == pass)."""
+    problems = []
+    paths = [p for pattern in patterns for p in sorted(glob.glob(pattern))]
+    if not paths:
+        problems.append(f"no files matched {patterns}")
+        return problems
+    for path in paths:
+        try:
+            with open(path) as f:
+                record = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{path}: unreadable ({e})")
+            continue
+        prov = record.get("provenance")
+        if not isinstance(prov, dict):
+            problems.append(f"{path}: missing provenance block")
+            continue
+        for field in REQUIRED_PROVENANCE:
+            if field not in prov:
+                problems.append(f"{path}: provenance missing {field!r}")
+        timing = record.get("timing")
+        if timing is not None and extract_probe(record) is None:
+            problems.append(f"{path}: timing block without probe cells")
+    return problems
+
+
+def write_baseline(out: str = BENCH_JSON) -> str:
+    """Refresh the canonical stored baseline (BENCH_perf.json)."""
+    t0 = time.time()
+    probe = perf_probe(fresh=True)
+    record = {
+        "bench": "perf_gate",
+        "timing": {**bench_timing(time.time() - t0, probe=False),
+                   "probe": probe},
+    }
+    return write_json(out, record)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--bench-glob", action="append", default=None,
+                    help="glob(s) of BENCH json baselines (default: "
+                         "repo-root BENCH_*.json)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed warm-time regression fraction "
+                         f"(default {DEFAULT_TOLERANCE})")
+    ap.add_argument("--cross-machine", action="store_true",
+                    help="compare even when machine fingerprints differ")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"re-measure and write {BENCH_JSON}, skipping the "
+                         "gate")
+    ap.add_argument("--out", type=str, default=BENCH_JSON,
+                    help="baseline output path for --write-baseline")
+    ap.add_argument("--check-provenance", action="append", default=None,
+                    metavar="GLOB",
+                    help="assert provenance fields on matched BENCH json "
+                         "artifacts instead of running the gate")
+    args = ap.parse_args(argv)
+
+    if args.check_provenance:
+        problems = check_provenance(args.check_provenance)
+        if problems:
+            for p in problems:
+                print(f"# perf_gate provenance FAIL: {p}", flush=True)
+            return 1
+        print("# perf_gate: provenance fields present on all matched "
+              "artifacts", flush=True)
+        return 0
+
+    if args.write_baseline:
+        path = write_baseline(args.out)
+        print(f"# perf_gate: wrote baseline {path}", flush=True)
+        return 0
+
+    patterns = args.bench_glob or [os.path.join(REPO_ROOT, "BENCH_*.json")]
+    baselines = load_baselines(patterns)
+    current = perf_probe()
+    verdict = gate_verdict(current, baselines, tolerance=args.tolerance,
+                           cross_machine=args.cross_machine)
+    for s in verdict["skipped"]:
+        print(f"# perf_gate skip: {s['path']} ({s['reason']})", flush=True)
+    if not verdict["compared"]:
+        print("# perf_gate: SKIP — no comparable stored baselines "
+              f"(patterns {patterns}, fingerprint "
+              f"{machine_fingerprint()}); run --write-baseline on this "
+              "machine to arm the gate", flush=True)
+        return 0
+    for r in verdict["compared"]:
+        state = "ok" if r["ok"] else "REGRESSION"
+        print(f"# perf_gate {state}: {r['cell']} warm {r['warm_s']:.4f}s vs "
+              f"baseline {r['baseline_warm_s']:.4f}s "
+              f"(x{r['ratio']}, from {os.path.basename(r['baseline_from'])})",
+              flush=True)
+    if not verdict["ok"]:
+        print(f"# perf_gate: FAIL — warm time regressed more than "
+              f"{100 * args.tolerance:.0f}% on a pinned cell", flush=True)
+        return 1
+    print("# perf_gate: PASS", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,10 +35,11 @@ import time
 
 import numpy as np
 
-from benchmarks.common import write_csv, write_json
+from benchmarks.common import bench_timing, write_csv, write_json
 from repro.core.instance import Instance, pack
 from repro.core.objectives import makespan
 from repro.core.solvers.online_jax import online_greedy_jax
+from repro.obs import Tracer
 from repro.scenarios.fleets import build_fleet
 from repro.scenarios.generator import ScenarioConfig, sample_job
 from repro.stream import StreamConfig, simulate_stream
@@ -91,36 +92,67 @@ def _dist(xs: list[float]) -> dict:
             "max": round(float(a.max()), 3)}
 
 
+def _round_dist(d: dict) -> dict:
+    return {k: round(v, 3) if isinstance(v, float) else v
+            for k, v in d.items()}
+
+
+def _cell_config(knobs: dict, family: str, rate: float,
+                 seed: int) -> StreamConfig:
+    return StreamConfig(arrivals=family, rate=rate, horizon=knobs["horizon"],
+                        n_lanes=knobs["n_lanes"], family=knobs["family"],
+                        width=knobs["width"], depth=knobs["depth"],
+                        n_machines=knobs["n_machines"], fleet=knobs["fleet"],
+                        mean_dur=knobs["mean_dur"], seed=seed)
+
+
 def run_cell(knobs: dict, family: str, load: float, rate: float,
              seed: int) -> dict:
-    cfg = StreamConfig(arrivals=family, rate=rate, horizon=knobs["horizon"],
-                       n_lanes=knobs["n_lanes"], family=knobs["family"],
-                       width=knobs["width"], depth=knobs["depth"],
-                       n_machines=knobs["n_machines"], fleet=knobs["fleet"],
-                       mean_dur=knobs["mean_dur"], seed=seed)
+    cfg = _cell_config(knobs, family, rate, seed)
     t0 = time.time()
     res = simulate_stream(cfg)
     seconds = time.time() - t0
-    jobs = res.jobs
-    admitted = [sj for sj in jobs if sj.admitted >= 0]
-    finished = [sj for sj in jobs if sj.finished]
+    # Counts and distributions come from the engine's own metrics registry
+    # (res.summary) — the benchmark no longer re-derives them from job lists.
+    s = res.summary
+    n_finished = s["jobs_completed"]
+    finished = [sj for sj in res.jobs if sj.finished]
     return {
         "arrivals": family,
         "load": load,
         "rate_jobs_per_epoch": round(rate, 5),
-        "n_jobs": len(jobs),
-        "n_finished": len(finished),
-        "n_unfinished": len(jobs) - len(finished),
+        "n_jobs": len(res.jobs),
+        "n_admitted": s["jobs_admitted"],
+        "n_rejected": s["jobs_rejected"],
+        "n_finished": n_finished,
+        "n_unfinished": len(res.jobs) - n_finished,
+        "final_lane_occupancy": s["final_lane_occupancy"],
         "seconds": round(seconds, 3),
-        "jobs_per_sec": round(len(finished) / max(seconds, 1e-9), 2),
-        "queue_delay_epochs": _dist([sj.queue_delay for sj in admitted]),
-        "carbon_savings_pct": _dist(
-            [100.0 * sj.carbon_savings for sj in finished]),
+        "jobs_per_sec": round(n_finished / max(seconds, 1e-9), 2),
+        "queue_delay_epochs": _round_dist(s["queue_delay_epochs"]),
+        "carbon_savings_pct": _round_dist(s["carbon_savings_pct"]),
         "realized_stretch": _dist(
             [(sj.completed - sj.admitted)
              / max(1, sj.greedy_makespan - sj.admitted)
              for sj in finished]),
     }
+
+
+def export_trace(path: str, seed: int = 2024) -> str:
+    """Stream one tiny traced cell and export its Chrome-trace JSON (the CI
+    trace artifact; open at https://ui.perfetto.dev)."""
+    knobs = dict(TINY)
+    loads, families = knobs.pop("loads"), knobs.pop("families")
+    service = probe_service_epochs(knobs, seed)
+    rate = loads[0] * knobs["n_lanes"] / service
+    tracer = Tracer()
+    simulate_stream(_cell_config(knobs, families[0], rate, seed),
+                    tracer=tracer)
+    lanes = {i: f"lane {i}" for i in range(knobs["n_lanes"])}
+    tracer.export(path, lane_names=lanes)
+    print(f"# stream_serve: wrote engine trace {path} "
+          f"({len(tracer.events)} events)", flush=True)
+    return path
 
 
 def run(tiny: bool = False, out: str | None = None,
@@ -142,6 +174,7 @@ def run(tiny: bool = False, out: str | None = None,
         "bench": "stream_serve",
         "mode": "tiny" if tiny else "full",
         "seconds": round(seconds, 3),
+        "timing": bench_timing(seconds),
         "seed": seed,
         "service_epochs": round(service, 3),
         "capacity_jobs_per_epoch": round(capacity, 5),
@@ -178,7 +211,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=2024)
     ap.add_argument("--out", type=str, default=None,
                     help=f"output JSON path (default {BENCH_JSON})")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="skip the grid; stream one tiny traced cell and "
+                         "export its Chrome-trace JSON to PATH")
     args = ap.parse_args()
+    if args.trace_out:
+        export_trace(args.trace_out, seed=args.seed)
+        return
     run(tiny=args.tiny, out=args.out, seed=args.seed)
 
 

@@ -30,7 +30,7 @@ import argparse
 import os
 import time
 
-from benchmarks.common import write_csv, write_json
+from benchmarks.common import bench_timing, write_csv, write_json
 from repro.core.solvers.annealing import SAConfig
 from repro.scenarios import (SweepSpec, structure_cells, sweep_structure,
                              trend_summary)
@@ -113,6 +113,7 @@ def run(tiny: bool = False, offline: bool = True,
         "bench": "structure_sweep",
         "mode": "tiny" if tiny else "full",
         "seconds": round(seconds, 3),
+        "timing": bench_timing(seconds),
         **meta,
         "trends": trends,
         "cells": rows,

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 
 from repro.core.instance import PackedInstance
 from repro.core.objectives import makespan
+from repro.obs.trace import traced_xla_call
 
 BIG = jnp.int32(1 << 20)
 
@@ -417,8 +418,12 @@ def sweep_policies(batch: PackedInstance, intensity, thetas, windows,
     """
     intensity = jnp.asarray(intensity)
     windows = np.asarray(windows, np.int32)
-    return _sweep(batch, intensity,
-                  jnp.asarray(thetas, jnp.float32), jnp.asarray(windows),
-                  jnp.asarray(stretches, jnp.float32),
-                  n_epochs=int(intensity.shape[-1]),
-                  max_window=int(windows.max()), machine_rule=machine_rule)
+    # traced_xla_call: with REPRO_TRACE unset this IS a direct _sweep call;
+    # when tracing, the host records the call's wall-clock span (compile vs
+    # warm) around the jitted program — never inside it (repro.obs).
+    return traced_xla_call(
+        "online_jax.sweep", _sweep, batch, intensity,
+        jnp.asarray(thetas, jnp.float32), jnp.asarray(windows),
+        jnp.asarray(stretches, jnp.float32),
+        n_epochs=int(intensity.shape[-1]),
+        max_window=int(windows.max()), machine_rule=machine_rule)

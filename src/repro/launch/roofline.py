@@ -135,6 +135,38 @@ def model_flops(arch: str, shape: str) -> float:
     return 2.0 * n * tokens
 
 
+def achieved_vs_roofline(cost: dict, warm_s: float) -> dict:
+    """Achieved vs roofline for one measured jitted program.
+
+    ``cost`` is :func:`repro.launch.hlo_analysis.cost_dict` of the compiled
+    program; ``warm_s`` its measured warm wall-clock.  Returns the
+    achieved-FLOP/s / achieved-bytes/s columns the benchmark provenance
+    stamps into every BENCH_*.json, plus the roofline bound at the v5e
+    reference constants (``PEAK_FLOPS`` / ``HBM_BW``).  ``roofline_frac``
+    is bound-time / measured-time — on a TPU the fraction of the roofline
+    achieved; on the CPU backend it reads as headroom to the reference
+    accelerator (the perf gate tracks *warm_s* regressions either way,
+    machine-local).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes", 0.0))
+    warm_s = max(float(warm_s), 1e-12)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    bound_s = max(compute_s, memory_s)
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_,
+        "achieved_flops_per_s": flops / warm_s,
+        "achieved_bytes_per_s": bytes_ / warm_s,
+        "roofline_compute_s": compute_s,
+        "roofline_memory_s": memory_s,
+        "roofline_bound_s": bound_s,
+        "roofline_frac": bound_s / warm_s,
+        "dominant": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
 def analyze(rec: dict) -> dict | None:
     if rec.get("status") != "ok" or "flops" not in rec:
         return None

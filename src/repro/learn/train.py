@@ -241,10 +241,14 @@ def train_gate(batch: PackedInstance, intensity, cum, group_of,
     raw0 = jnp.stack([logit(theta0), jnp.zeros_like(theta0)], axis=1)
     if feats is None:
         feats = jnp.zeros(intensity.shape, jnp.float32)
-    return _train(batch, intensity, jnp.asarray(cum), jnp.asarray(group_of),
-                  jnp.asarray(window), budget, base_c, ms0,
-                  jnp.asarray(feats, jnp.float32), raw0, cfg, max_window,
-                  n_epochs)
+    # Host-side trace boundary (repro.obs): a direct _train call unless
+    # tracing is enabled, in which case the wall-clock span is recorded
+    # around (never inside) the jitted program — values are identical.
+    from repro.obs.trace import traced_xla_call
+    return traced_xla_call(
+        "learn.train", _train, batch, intensity, jnp.asarray(cum),
+        jnp.asarray(group_of), jnp.asarray(window), budget, base_c, ms0,
+        jnp.asarray(feats, jnp.float32), raw0, cfg, max_window, n_epochs)
 
 
 @functools.partial(jax.jit,
@@ -285,7 +289,9 @@ def evaluate_theta(batch: PackedInstance, intensity, cum, theta, window,
     base_c = jnp.asarray(base_c, jnp.float32)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
         jnp.int32)
-    gated_c, gated_ms, done = _hard_eval(
+    from repro.obs.trace import traced_xla_call
+    gated_c, gated_ms, done = traced_xla_call(
+        "learn.hard_eval", _hard_eval,
         batch, intensity, jnp.asarray(cum), jnp.asarray(theta, jnp.float32),
         jnp.asarray(window), budget, int(window.max()), n_epochs,
         machine_rule)

@@ -1,0 +1,28 @@
+"""Observability layer: event tracing + metrics, zero-overhead when off.
+
+Two host-side primitives threaded through the engines and benchmarks:
+
+* :mod:`repro.obs.trace` — structured event tracing with a
+  Chrome-trace/Perfetto JSON exporter.  A run of the streaming dispatch
+  engine renders as a lane x time timeline next to the carbon-intensity
+  counter track.  Enabled explicitly (pass a :class:`Tracer`) or globally
+  via ``REPRO_TRACE=1``; the default is a no-op null tracer.
+* :mod:`repro.obs.metrics` — counters/gauges/histograms with a
+  ``snapshot()`` API; :meth:`repro.stream.engine.StreamEngine.summary`
+  and the benchmark harness are built on it.
+
+The hard contract (property- and golden-tested in ``tests/test_obs.py``):
+telemetry-on is **bit-exact** to telemetry-off.  All collection happens on
+the host *around* jitted steps — never inside traced code — so enabling
+tracing can never move a dispatch decision, a gate threshold, or a golden.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry)
+from repro.obs.trace import (NULL_TRACER, Tracer, get_tracer,  # noqa: F401
+                             set_tracer, trace_enabled, traced_xla_call)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL_TRACER", "Tracer", "get_tracer", "set_tracer", "trace_enabled",
+    "traced_xla_call",
+]

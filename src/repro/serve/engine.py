@@ -28,6 +28,7 @@ Semantics contracts (regression-locked in ``tests/test_serve.py``):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 from repro.models.api import Model
 from repro.models.common import ArchConfig
 from repro.models.parallel import ParallelCfg
+from repro.obs import MetricsRegistry, Tracer, get_tracer
 from repro.serve.lanes import LanePool
 
 
@@ -61,9 +63,18 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, model: Model, params, cfg: ArchConfig,
-                 par: ParallelCfg, sc: ServeConfig = ServeConfig()):
+                 par: ParallelCfg, sc: ServeConfig = ServeConfig(),
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.model, self.params, self.cfg, self.par, self.sc = \
             model, params, cfg, par, sc
+        # Host-side telemetry (repro.obs): never inside jitted code, so
+        # sampled tokens are bit-exact with tracing on or off.  The tick
+        # index is the simulation clock for trace timestamps.
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._wall_seen: set[str] = set()
+        self._tick = 0
         self._decode = jax.jit(
             lambda p, b: model.decode(p, b, cfg, par))
         self._prefill = jax.jit(
@@ -103,9 +114,31 @@ class ServeEngine:
                 src = v
             self.caches[k] = pool.at[:, lane].set(src[:, 0])
 
+    # -- telemetry ------------------------------------------------------------
+    def _observe_wall(self, name: str, seconds: float) -> None:
+        """first = jit compile + execute span (or a warm process-cache hit);
+        the rest are warm steps — the compile/warm split summary() reports."""
+        suffix = "_first" if name not in self._wall_seen else "_warm"
+        self._wall_seen.add(name)
+        self.metrics.histogram(name + suffix).observe(seconds)
+
+    def summary(self) -> dict:
+        """Aggregate view of the last ``run`` from the metrics registry."""
+        snap = self.metrics.snapshot()
+        return {
+            "requests_admitted": snap.get("requests_admitted", 0),
+            "requests_completed": snap.get("requests_completed", 0),
+            "requests_truncated": snap.get("requests_truncated", 0),
+            "decode_tokens": snap.get("decode_tokens", 0),
+            "ticks": snap.get("ticks", 0),
+            "wall": {k: v for k, v in snap.items()
+                     if k.startswith(("decode_wall_s", "prefill_wall_s"))},
+        }
+
     # -- scheduling -----------------------------------------------------------
     def _admit(self, queue: list[Request]) -> None:
         for lane, req in self.lanes.admit(queue):
+            t0 = time.perf_counter()
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             if self.cfg.n_encoder_layers:
                 batch["frame_embeds"] = jnp.zeros(
@@ -115,12 +148,17 @@ class ServeEngine:
                 batch["patch_embeds"] = jnp.zeros(
                     (1, P, self.cfg.d_model), jnp.bfloat16)
             logits, caches_1 = self._prefill(self.params, batch)
+            jax.block_until_ready(caches_1)   # prefill_wall_s covers the solve
             if self.caches is None:
                 self._init_caches(caches_1)
             self._insert(lane, caches_1, len(req.prompt))
             tok = self._sample(logits)[0]
             req.out_tokens.append(int(tok))
             self.lane_pos[lane] = len(req.prompt)
+            self._observe_wall("prefill_wall_s", time.perf_counter() - t0)
+            self.metrics.counter("requests_admitted").inc()
+            self.tracer.instant("admit", self._tick, rid=req.rid, lane=lane,
+                                prompt_len=len(req.prompt))
 
     def _sample(self, logits: jnp.ndarray) -> np.ndarray:
         logits = logits[..., :self.cfg.vocab_size]
@@ -135,6 +173,9 @@ class ServeEngine:
             ) -> list[Request]:
         queue = list(requests)
         done: list[Request] = []
+        self.metrics.reset()
+        self._wall_seen = set()
+        self._tick = 0
         for _ in range(max_ticks):
             self._admit(queue)
             active = [l for l, _ in self.lanes.active()]
@@ -142,6 +183,9 @@ class ServeEngine:
                 if not queue:
                     break
                 continue
+            if self.tracer.enabled:
+                self.tracer.counter("lanes_active", self._tick, len(active))
+            t0 = time.perf_counter()
             # Pool decode tick: every lane advances one token at its own
             # position (decode_step supports per-lane pos vectors).
             last = jnp.asarray(
@@ -150,7 +194,10 @@ class ServeEngine:
             batch = {"token": last, "pos": jnp.asarray(self.lane_pos),
                      **self.caches}
             logits, self.caches = self._decode(self.params, batch)
-            toks = self._sample(logits)
+            toks = self._sample(logits)          # host sync (np.asarray)
+            self._observe_wall("decode_wall_s", time.perf_counter() - t0)
+            self.metrics.counter("ticks").inc()
+            self.metrics.counter("decode_tokens").inc(len(active))
             for lane in active:
                 req = self.lanes.payload(lane)
                 req.out_tokens.append(int(toks[lane]))
@@ -166,6 +213,13 @@ class ServeEngine:
                     req.truncated = bool(horizon and not finished)
                     done.append(req)
                     self.lanes.evict(lane)
+                    self.metrics.counter("requests_completed").inc()
+                    if req.truncated:
+                        self.metrics.counter("requests_truncated").inc()
+                    self.tracer.instant("evict", self._tick, rid=req.rid,
+                                        lane=lane, tokens=len(req.out_tokens),
+                                        truncated=req.truncated)
+            self._tick += 1
         # Drain: whatever is still in flight comes back done=False, but its
         # lane is freed — a second run() on this engine starts clean instead
         # of double-serving stale lanes.

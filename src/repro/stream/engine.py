@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple, Sequence
 
 import numpy as np
@@ -63,6 +64,7 @@ from repro.core.solvers.online_jax import (DispatchState, dirty_mask,
                                            downstream_critical_path,
                                            simulate_online)
 from repro.forecast.rolling import rolling_dirty_mask
+from repro.obs import MetricsRegistry, Tracer, get_tracer
 from repro.scenarios.batching import padding_rows
 from repro.scenarios.fleets import build_fleet
 from repro.scenarios.generator import ScenarioConfig, sample_job
@@ -139,10 +141,15 @@ class StreamJob:
         return 1.0 - self.carbon / self.greedy_carbon
 
 
+# An un-observed histogram's snapshot (summary() placeholder).
+_EMPTY_DIST = {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0, "max": 0.0}
+
+
 class StreamResult(NamedTuple):
     jobs: list[StreamJob]          # every stream job, rid order
     events: list[dict]             # serializable event log (golden-locked)
     meta: dict
+    summary: dict = {}             # StreamEngine.summary() of the run
 
 
 # ---------------------------------------------------------------------------
@@ -237,9 +244,19 @@ class StreamEngine:
                  forecast_every: int | None = None,
                  forecast_scale: float = 1.0,
                  forecast_model: str = "oracle_ar1", seed: int = 0,
-                 validate_evictions: bool = True):
+                 validate_evictions: bool = True,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         if machine_rule not in ("earliest_finish", "min_energy"):
             raise ValueError(f"unknown machine_rule {machine_rule!r}")
+        # Telemetry is host-side only (bit-exact contract: repro.obs).  The
+        # ambient tracer resolves to a no-op unless REPRO_TRACE=1 or a
+        # global tracer is installed; metrics are always on (cheap Python
+        # around an already-synchronous host loop) and feed summary().
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._wall_seen: set[str] = set()
+        self.forecast_every = forecast_every
         self.trace = trace
         self.powers = tuple(float(p) for p in powers_kw)
         self.speeds = tuple(float(s) for s in speeds)
@@ -263,6 +280,10 @@ class StreamEngine:
                 jax.random.key(seed), jnp.float32(forecast_scale),
                 every=int(forecast_every), max_window=int(window),
                 model=forecast_model)
+        # Host copies for telemetry reads (the arrays are computed either
+        # way on the first tick; pulling them here changes nothing).
+        self._dirty_host = np.asarray(self.dirty)
+        self._intensity_host = np.asarray(trace.intensity)
         self.pool = LanePool(n_lanes)
         self._reset_pool_state()
 
@@ -284,12 +305,18 @@ class StreamEngine:
         job = dataclasses.replace(sj.job, arrival=t)   # can't start pre-lane
         inst = pack(Instance(jobs=(job,), powers_kw=self.powers,
                              speeds=self.speeds), pad_tasks=self.T)
+        t0 = time.perf_counter()
         cp, budget, obj, complete = _admission_eval(
             inst, self.cum, jnp.float32(self.stretch), jnp.int32(t),
             n_epochs=self.E, machine_rule=self.machine_rule)
-        if not bool(complete):
+        complete = bool(complete)      # host sync: the admission solve ran
+        self._observe_wall("admission_wall_s", time.perf_counter() - t0)
+        if not complete:
             # Too late even greedily: reject instead of wedging the lane.
             # The job surfaces with admitted == -1 / finished == False.
+            self.metrics.counter("jobs_rejected").inc()
+            self.tracer.instant("reject", t, rid=sj.rid,
+                                arrival=int(sj.arrival))
             return False
         self.pool_inst, self.cp, self.state, self.budget = _insert_lane(
             self.pool_inst, self.cp, self.state, self.budget,
@@ -300,6 +327,12 @@ class StreamEngine:
         sj.greedy_makespan = int(obj.makespan)
         sj.greedy_carbon = float(obj.carbon)
         sj.greedy_energy = float(obj.energy)
+        self.metrics.counter("jobs_admitted").inc()
+        self.metrics.histogram("queue_delay_epochs").observe(sj.queue_delay)
+        self.tracer.instant(
+            "admit", t, rid=sj.rid, lane=lane, arrival=int(sj.arrival),
+            queue_delay=int(sj.queue_delay), budget=int(sj.budget),
+            carbon_gpkwh=round(float(self._intensity_host[t]), 3))
         return True
 
     def _finish(self, lane: int, sj: StreamJob) -> None:
@@ -316,6 +349,67 @@ class StreamEngine:
         sj.start = np.asarray(row.start)
         sj.assign = np.asarray(row.assign)
         sj.finished = True
+        self.metrics.counter("jobs_completed").inc()
+        self.metrics.histogram("carbon_savings_pct").observe(
+            100.0 * sj.carbon_savings)
+        if self.tracer.enabled:
+            self.tracer.span(f"job:{sj.rid}", sj.admitted, sj.completed,
+                             lane=lane, rid=sj.rid,
+                             carbon_g=round(sj.carbon, 3),
+                             greedy_carbon_g=round(sj.greedy_carbon, 3),
+                             savings_pct=round(100 * sj.carbon_savings, 2))
+            self.tracer.instant("evict", sj.completed, rid=sj.rid, lane=lane)
+
+    # -- telemetry ------------------------------------------------------------
+
+    def _observe_wall(self, name: str, seconds: float) -> None:
+        """Wall-clock split: the first call per name within a run lands in
+        the ``*_first`` histogram (jit compile + execute — or a warm hit on
+        the process-wide jit cache), later calls in ``*_warm``."""
+        first = name not in self._wall_seen
+        self._wall_seen.add(name)
+        suffix = "_first" if first else "_warm"
+        self.metrics.histogram(name + suffix).observe(seconds)
+
+    def _trace_tick(self, t: int, queue: list) -> None:
+        """Per-tick trace samples (guarded: zero work when tracing is off)."""
+        active = sum(1 for _ in self.pool.active())
+        dirty = bool(self._dirty_host[t])
+        self.tracer.counter("gate", t, 1.0 if dirty else 0.0)
+        self.tracer.counter("carbon_gpkwh", t,
+                            float(self._intensity_host[t]))
+        self.tracer.counter("lanes_active", t, active)
+        self.tracer.counter("queue_len", t, sum(
+            1 for s in queue if s.job.arrival <= t))
+        if dirty and any(not self._done[lane]
+                         for lane, _ in self.pool.active()):
+            # The gate is closed while admitted work is still unplaced —
+            # this epoch's ready tasks are (budget permitting) deferred.
+            self.tracer.instant("gate_defer", t)
+        if self.forecast_every is not None and t % self.forecast_every == 0:
+            # Forecast re-quantile boundary: the rolling gate's thresholds
+            # from here on were re-solved with epoch-t information.
+            self.tracer.instant("forecast_resolve", t)
+
+    def summary(self) -> dict:
+        """Aggregate view of the last ``run`` from the metrics registry:
+        job counts, the queue-delay and savings distributions, final lane
+        occupancy, and the jit-compile vs warm wall-clock split."""
+        snap = self.metrics.snapshot()
+        return {
+            "jobs_admitted": snap.get("jobs_admitted", 0),
+            "jobs_rejected": snap.get("jobs_rejected", 0),
+            "jobs_completed": snap.get("jobs_completed", 0),
+            "queue_delay_epochs": snap.get(
+                "queue_delay_epochs", dict(_EMPTY_DIST)),
+            "carbon_savings_pct": snap.get(
+                "carbon_savings_pct", dict(_EMPTY_DIST)),
+            "final_lane_occupancy": snap.get("final_lane_occupancy", 0),
+            "gate_closed_epochs": snap.get("gate_closed_epochs", 0),
+            "ticks": snap.get("ticks", 0),
+            "wall": {k: v for k, v in snap.items()
+                     if k.startswith(("tick_wall_s", "admission_wall_s"))},
+        }
 
     # -- main loop ------------------------------------------------------------
 
@@ -325,11 +419,16 @@ class StreamEngine:
 
         The pool is drained before returning, so back-to-back ``run`` calls
         on one engine are independent (the serve-engine re-entry contract).
+        Per-run telemetry accumulates in ``self.metrics`` (reset on entry;
+        read it through :meth:`summary`) and, when tracing is enabled, in
+        ``self.tracer``.
         """
         for j in jobs:
             if j.n_tasks > self.T:
                 raise ValueError(f"job with {j.n_tasks} tasks exceeds "
                                  f"pad_tasks={self.T}")
+        self.metrics.reset()
+        self._wall_seen: set[str] = set()
         sjobs = [StreamJob(rid=i, job=j) for i, j in enumerate(jobs)]
         queue = sorted(sjobs, key=lambda s: (s.job.arrival, s.rid))
         t = 0
@@ -353,15 +452,24 @@ class StreamEngine:
                 t = max(t + 1, int(queue[0].job.arrival))
                 continue
             # 4. ONE jitted gate-and-dispatch step over the whole pool
+            if self.tracer.enabled:
+                self._trace_tick(t, queue)
+            t0 = time.perf_counter()
             self.state, done, comp = _pool_tick(
                 self.pool_inst, self.cp, self.state, self.dirty,
                 self.budget, jnp.int32(t), machine_rule=self.machine_rule)
             self._done, self._comp = np.asarray(done), np.asarray(comp)
+            self._observe_wall("tick_wall_s", time.perf_counter() - t0)
+            self.metrics.counter("ticks").inc()
+            if self._dirty_host[t]:
+                self.metrics.counter("gate_closed_epochs").inc()
             t += 1
         # jobs that finished on the final tick
         for lane, sj in list(self.pool.active()):
             if self._done[lane] and self._comp[lane] <= t:
                 self._finish(lane, sj)
+        self.metrics.gauge("final_lane_occupancy").set(
+            sum(1 for _ in self.pool.active()))
         # drain: unfinished jobs surface flagged; the pool resets so the
         # engine is re-entrant (never re-dispatches stale lanes)
         self.pool.drain()
@@ -416,7 +524,8 @@ def event_log(jobs: Sequence[StreamJob]) -> list[dict]:
 
 
 def simulate_stream(cfg: StreamConfig,
-                    jobs: Sequence[Job] | None = None) -> StreamResult:
+                    jobs: Sequence[Job] | None = None,
+                    tracer: Tracer | None = None) -> StreamResult:
     """Run one streaming scenario end to end, deterministically.
 
     Everything derives from ``cfg.seed``: the arrival times, the job DAGs
@@ -424,7 +533,9 @@ def simulate_stream(cfg: StreamConfig,
     synthesized year through :func:`repro.core.carbon.sample_window` — the
     path whose off-by-one fix makes the final window reachable).  ``jobs``
     overrides the sampled stream (the closed-batch parity tests inject
-    arrival-at-0 jobs this way).
+    arrival-at-0 jobs this way).  ``tracer`` (or ``REPRO_TRACE=1``)
+    captures the run's event timeline — host-side only, bit-exact with
+    tracing off.
     """
     cfg.validate()
     rng = np.random.default_rng(cfg.seed)
@@ -443,7 +554,8 @@ def simulate_stream(cfg: StreamConfig,
                        stretch=cfg.stretch, machine_rule=cfg.machine_rule,
                        forecast_every=cfg.forecast_every,
                        forecast_scale=cfg.forecast_scale,
-                       forecast_model=cfg.forecast_model, seed=cfg.seed)
+                       forecast_model=cfg.forecast_model, seed=cfg.seed,
+                       tracer=tracer)
     sjobs = eng.run(jobs)
     meta = {
         "config": {k: (v if v is None or isinstance(v, (int, float, str,
@@ -454,4 +566,4 @@ def simulate_stream(cfg: StreamConfig,
         "pad_tasks": pad_tasks,
         "n_epochs": trace.n_epochs,
     }
-    return StreamResult(sjobs, event_log(sjobs), meta)
+    return StreamResult(sjobs, event_log(sjobs), meta, eng.summary())

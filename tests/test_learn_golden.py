@@ -121,6 +121,34 @@ def test_learn_tiny_matches_golden():
         rtol=1e-4, atol=2e-3, err_msg="learned_savings_pct")
 
 
+def test_learn_tiny_golden_unchanged_under_tracing(monkeypatch):
+    """Telemetry bit-exactness vs the stored golden: the tiny training run
+    re-executed with ``REPRO_TRACE=1`` (bypassing the lru_cache) must
+    reproduce the locked loss curve / theta / savings, with the learner's
+    jitted step captured on the ambient tracer."""
+    from repro.obs import get_tracer, set_tracer
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    set_tracer(None)
+    try:
+        golden = _load_golden()["learn_tiny"]
+        got = _tiny_run.__wrapped__(None)
+        tracer = get_tracer()
+        assert tracer.enabled
+        assert any(e["name"].startswith("xla:") for e in tracer.events)
+        assert got["families"] == golden["families"]
+        np.testing.assert_allclose(
+            got["loss_curve"], golden["loss_curve"], rtol=1e-3, atol=2e-4,
+            err_msg="traced loss_curve")
+        np.testing.assert_allclose(
+            got["final_theta"], golden["final_theta"], rtol=1e-3, atol=2e-3,
+            err_msg="traced final_theta")
+        np.testing.assert_allclose(
+            got["learned_savings_pct"], golden["learned_savings_pct"],
+            rtol=1e-4, atol=2e-3, err_msg="traced learned_savings_pct")
+    finally:
+        set_tracer(None)
+
+
 def test_learn_tiny_sharded_matches_golden():
     """Golden stability under sharding: the tiny training run through
     repro.shard (all local devices — 8 under the CI forced-device job) is

@@ -77,6 +77,21 @@ def test_stream_tiny_matches_golden():
                     err_msg=f"{ctx}.{k}")
 
 
+def test_stream_tiny_golden_unchanged_under_tracing(monkeypatch):
+    """The telemetry bit-exact contract against the stored golden: the
+    same stream re-run with ``REPRO_TRACE=1`` must replay the locked event
+    log unchanged (and must actually have traced something)."""
+    from repro.obs import get_tracer, set_tracer
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    set_tracer(None)                 # force env re-read -> fresh tracer
+    try:
+        test_stream_tiny_matches_golden()
+        tracer = get_tracer()
+        assert tracer.enabled and len(tracer.events) > 0
+    finally:
+        set_tracer(None)             # do not leak into other tests
+
+
 def _write_golden():
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     record = _tiny_run()

@@ -150,6 +150,30 @@ def test_structure_sweep_tiny_sharded_matches_golden():
         _assert_row_matches(got, want, ctx)
 
 
+def test_structure_sweep_tiny_golden_unchanged_under_tracing(monkeypatch):
+    """Telemetry bit-exactness vs the stored golden: the tiny sweep re-run
+    with ``REPRO_TRACE=1`` (bypassing the lru_cache, so the traced path
+    really executes) must reproduce the locked rows, and the ambient
+    tracer must have captured the sweep's jitted calls."""
+    from repro.obs import get_tracer, set_tracer
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    set_tracer(None)
+    try:
+        golden = _load_golden()
+        rows, meta = _tiny_rows.__wrapped__(None)
+        tracer = get_tracer()
+        assert tracer.enabled
+        assert any(e["name"].startswith("xla:") for e in tracer.events)
+        want_rows = golden["structure_tiny"]["cells"]
+        assert len(rows) == len(want_rows)
+        for got, want in zip(rows, want_rows):
+            ctx = (f"traced cell[{want['family']}-m{want['n_machines']}"
+                   f"-{want['fleet']}]")
+            _assert_row_matches(got, want, ctx)
+    finally:
+        set_tracer(None)
+
+
 def test_bench_online_cell_matches_golden():
     golden = _load_golden()
     got = _bench_online_cell()
