@@ -200,9 +200,45 @@ def _lower_learn_probe():
     return lowered, args
 
 
+def _lower_fitness_probe():
+    from repro.core.solvers import common as solver_common
+    batch, _, cums = _probe_batch()
+    inst = jax.tree.map(lambda a: a[0], batch)
+    cum = cums[0]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(PROBE_SEED))
+    P = 64
+    prio = jax.random.normal(k1, (P, inst.T), jnp.float32)
+    assign = solver_common.random_allowed_assign(k2, inst, (P,))
+    deadline = jnp.int32(PROBE_HORIZON)
+    fn = jax.jit(functools.partial(
+        solver_common.population_fitness, objective="carbon",
+        machine_rule="fixed", sweeps=2, use_kernels=True))
+    args = (inst, cum, deadline, prio, assign)
+    return fn.lower(*args), args
+
+
+def _lower_gate_probe():
+    from repro.core.solvers.online_jax import dirty_mask
+    _, inten, _ = _probe_batch()
+    fn = jax.jit(jax.vmap(
+        functools.partial(dirty_mask, max_window=48, use_kernels=True),
+        in_axes=(0, None, None)))
+    args = (inten, jnp.float32(0.4), jnp.int32(48))
+    return fn.lower(*args), args
+
+
+# name -> (entry, builder).  ``entry`` is the dotted path of the function
+# the cell actually times — stamped into every BENCH_*.json probe block so
+# ``perf_gate --check-provenance`` can fail artifacts whose probes name a
+# kernel entry point that no longer exists (benchmark honesty: a probe
+# that silently times dead code is worse than no probe).
 PROBE_CELLS = {
-    "dispatch_sweep": _lower_dispatch_probe,
-    "learn_step": _lower_learn_probe,
+    "dispatch_sweep": ("repro.core.solvers.online_jax._sweep",
+                       _lower_dispatch_probe),
+    "learn_step": ("repro.learn.train._train", _lower_learn_probe),
+    "fitness_pallas": ("repro.kernels.ops.population_carbon",
+                       _lower_fitness_probe),
+    "gate_pallas": ("repro.kernels.ops.gate_threshold", _lower_gate_probe),
 }
 
 
@@ -234,8 +270,8 @@ def _probe_cell(build: Callable, timer: BenchTimer) -> dict:
 def _cached_probe() -> dict:
     timer = BenchTimer()
     return {
-        "cells": {name: _probe_cell(build, timer)
-                  for name, build in PROBE_CELLS.items()},
+        "cells": {name: {"entry": entry, **_probe_cell(build, timer)}
+                  for name, (entry, build) in PROBE_CELLS.items()},
         "warm_reps": PROBE_WARM_REPS,
         "fingerprint": machine_fingerprint(),
     }

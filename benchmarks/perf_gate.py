@@ -116,8 +116,38 @@ def gate_verdict(current: dict, baselines: list[tuple[str, dict]],
     }
 
 
+def _resolve_entry(entry: str) -> str | None:
+    """Import the longest module prefix of ``entry`` and getattr the rest.
+
+    Returns None when the dotted path resolves to a live object, else the
+    failure reason — a probe naming a kernel entry point that no longer
+    exists means the stored timings measure dead code.
+    """
+    import importlib
+    parts = entry.split(".")
+    for split in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:split]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[split:]:
+                obj = getattr(obj, attr)
+        except AttributeError as e:
+            return f"resolved module but {e}"
+        return None
+    return "no importable module prefix"
+
+
 def check_provenance(patterns: list[str]) -> list[str]:
-    """Missing-field report for the CI artifact check (empty == pass)."""
+    """Missing-field report for the CI artifact check (empty == pass).
+
+    Beyond the required provenance fields, every probe cell that names an
+    ``entry`` (the dotted path of the function it times) must resolve
+    against the *current* tree — stale probes pointing at removed or
+    renamed kernel entry points fail here instead of silently gating on
+    dead code.
+    """
     problems = []
     paths = [p for pattern in patterns for p in sorted(glob.glob(pattern))]
     if not paths:
@@ -138,8 +168,17 @@ def check_provenance(patterns: list[str]) -> list[str]:
             if field not in prov:
                 problems.append(f"{path}: provenance missing {field!r}")
         timing = record.get("timing")
-        if timing is not None and extract_probe(record) is None:
+        probe = extract_probe(record)
+        if timing is not None and probe is None:
             problems.append(f"{path}: timing block without probe cells")
+        for cell, data in (probe or {}).get("cells", {}).items():
+            entry = data.get("entry")
+            if entry is None:
+                continue   # pre-entry records stay valid
+            reason = _resolve_entry(entry)
+            if reason is not None:
+                problems.append(f"{path}: probe cell {cell!r} entry "
+                                f"{entry!r} does not resolve ({reason})")
     return problems
 
 

@@ -41,13 +41,15 @@ class SolveOut(NamedTuple):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("objective", "machine_rule", "cfg"))
+                   static_argnames=("objective", "machine_rule", "cfg",
+                                    "use_kernels"))
 def solve_sa(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
              key: jax.Array, objective: str = "carbon",
              machine_rule: str = "fixed", cfg: SAConfig = SAConfig(),
              prio_init: jnp.ndarray | None = None,
              assign_init: jnp.ndarray | None = None,
-             frozen: jnp.ndarray | None = None) -> SolveOut:
+             frozen: jnp.ndarray | None = None,
+             use_kernels: bool | None = None) -> SolveOut:
     """Minimize ``objective`` (see solvers.common) over SGS candidates.
 
     ``frozen`` (optional bool [T]) marks already-executing tasks (rolling
@@ -55,13 +57,18 @@ def solve_sa(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
     and migration all mask them — so the executed prefix the caller encoded
     in ``prio_init``/``assign_init`` survives the whole search exactly, and
     the timing sweep inside the decode never moves them either.
+
+    ``use_kernels`` selects the Pallas fitness path (bit-exact equal to
+    the jnp path — the solve result is identical either way); ``None``
+    defers to ``REPRO_KERNELS`` / the backend default, see
+    :func:`repro.core.solvers.common.population_fitness`.
     """
     T = inst.T
     free = (jnp.ones((T,), bool) if frozen is None else ~frozen)
     sweeps = 0 if objective == "makespan" else cfg.sweeps
-    fit_v = jax.vmap(lambda p, a: common.fitness_fn(
+    fit_v = lambda p, a: common.population_fitness(  # noqa: E731
         inst, cum, deadline, p, a, objective, machine_rule, sweeps,
-        frozen=frozen))
+        frozen=frozen, use_kernels=use_kernels)
 
     k_init, k_assign, k_run = jax.random.split(key, 3)
     rank = upward_rank(inst)

@@ -40,12 +40,17 @@ class BilevelResult(NamedTuple):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("objective", "stretch", "solver", "cfg1", "cfg2"))
+    jax.jit, static_argnames=("objective", "stretch", "solver", "cfg1", "cfg2",
+                              "use_kernels"))
 def solve_bilevel(inst: PackedInstance, cum: jnp.ndarray, key: jax.Array,
                   objective: str = "carbon", stretch: float = 1.0,
                   solver: str = "sa",
                   cfg1: SAConfig | GAConfig | None = None,
-                  cfg2: SAConfig | GAConfig | None = None) -> BilevelResult:
+                  cfg2: SAConfig | GAConfig | None = None,
+                  use_kernels: bool | None = None) -> BilevelResult:
+    """``use_kernels`` selects the Pallas fitness path inside both solver
+    phases (bit-exact equal to the jnp path, so the result is identical
+    either way); ``None`` defers to ``REPRO_KERNELS`` / backend default."""
     if solver == "sa":
         solve = solve_sa
         cfg1 = cfg1 or SAConfig()
@@ -60,7 +65,8 @@ def solve_bilevel(inst: PackedInstance, cum: jnp.ndarray, key: jax.Array,
 
     # ---- Phase 1: makespan-only (the carbon-agnostic baseline). ----------
     p1 = solve(inst, cum, NO_DEADLINE, k1, objective="makespan",
-               machine_rule="earliest_finish", cfg=cfg1)
+               machine_rule="earliest_finish", cfg=cfg1,
+               use_kernels=use_kernels)
     baseline = common.decode_full(
         inst, cum, NO_DEADLINE, p1.prio, p1.assign,
         objective="makespan", machine_rule="earliest_finish", sweeps=0)
@@ -73,7 +79,7 @@ def solve_bilevel(inst: PackedInstance, cum: jnp.ndarray, key: jax.Array,
     p2 = solve(inst, cum, deadline, k2, objective=objective,
                machine_rule="fixed", cfg=cfg2,
                prio_init=-baseline.start.astype(jnp.float32),
-               assign_init=baseline.assign)
+               assign_init=baseline.assign, use_kernels=use_kernels)
     optimized = common.decode_full(
         inst, cum, deadline, p2.prio, p2.assign,
         objective=objective, machine_rule="fixed", sweeps=max(

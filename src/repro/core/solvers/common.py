@@ -32,8 +32,9 @@ import jax.numpy as jnp
 
 from repro.core.decoder import sgs, timing_sweep
 from repro.core.instance import PackedInstance
-from repro.core.objectives import Objectives, evaluate, utilization
+from repro.core.objectives import Objectives, energy, evaluate, utilization
 from repro.core.validate import total_violations
+from repro.kernels import ops
 
 OBJECTIVES = ("makespan", "carbon", "energy")
 VIOLATION_PENALTY = 1e5      # fitness units per unit of validator mass
@@ -103,6 +104,58 @@ def fitness_fn(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
                       objective=objective, machine_rule=machine_rule,
                       sweeps=sweeps, frozen=frozen)
     return fitness_of(inst, res, deadline, objective)
+
+
+def population_fitness(inst: PackedInstance, cum: jnp.ndarray,
+                       deadline: jnp.ndarray, prio: jnp.ndarray,
+                       assign: jnp.ndarray, objective: str,
+                       machine_rule: str, sweeps: int,
+                       frozen: jnp.ndarray | None = None,
+                       use_kernels: bool | None = None) -> jnp.ndarray:
+    """Fitness of a whole candidate population.  prio/assign [Pop, T] -> [Pop].
+
+    The SA/GA hot loop: every proposal evaluation, init evaluation and
+    migration re-evaluation goes through here.  Two paths, **bit-exact
+    equal** (the contract ``tests/test_kernels.py`` property-tests):
+
+    * jnp path — literally ``vmap(fitness_fn)``, the golden-locked
+      reference;
+    * kernel path (``use_kernels`` / ``REPRO_KERNELS``, resolved by
+      :func:`repro.kernels.ops.kernels_enabled`) — decode (SGS + timing
+      sweep) stays vmapped jnp, but the carbon trace integral runs once
+      for the whole population in the Pallas kernel
+      (:func:`repro.kernels.ops.population_carbon`) instead of Pop
+      separate gather chains.
+
+    The makespan objective never touches the trace, so it always takes
+    the jnp path.  Meant to be called from inside the solvers' jitted
+    scope with ``use_kernels`` static (the branch resolves at trace time;
+    NB flipping ``REPRO_KERNELS`` after a solver cached its trace has no
+    effect on that cache — pass the argument in tests).
+    """
+    if objective != "makespan" and ops.kernels_enabled(use_kernels):
+        def _decode(p, a):
+            dec = sgs(inst, p, a, machine_rule=machine_rule)
+            start = dec.start
+            if sweeps > 0:
+                start = timing_sweep(inst, start, dec.assign, cum, deadline,
+                                     sweeps, frozen=frozen)
+            return start, dec.assign
+
+        starts, assigns = jax.vmap(_decode)(prio, assign)
+        carb = ops.population_carbon(inst, starts, assigns, cum)
+        pen = VIOLATION_PENALTY * jax.vmap(
+            lambda s, a: total_violations(inst, s, a, deadline)
+        )(starts, assigns).astype(jnp.float32)
+        if objective == "carbon":
+            return carb + pen
+        if objective == "energy":
+            en = jax.vmap(lambda a: energy(inst, a))(assigns)
+            return en + ENERGY_CARBON_TIEBREAK * carb + pen
+        raise ValueError(f"unknown objective {objective!r}")
+    return jax.vmap(lambda p, a: fitness_fn(
+        inst, cum, deadline, p, a, objective, machine_rule, sweeps,
+        frozen=frozen))(prio, assign)
 
 
 def random_allowed_assign(key: jax.Array, inst: PackedInstance,

@@ -31,21 +31,26 @@ class GAConfig(NamedTuple):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("objective", "machine_rule", "cfg"))
+                   static_argnames=("objective", "machine_rule", "cfg",
+                                    "use_kernels"))
 def solve_ga(inst: PackedInstance, cum: jnp.ndarray, deadline: jnp.ndarray,
              key: jax.Array, objective: str = "carbon",
              machine_rule: str = "fixed", cfg: GAConfig = GAConfig(),
              prio_init: jnp.ndarray | None = None,
              assign_init: jnp.ndarray | None = None,
-             frozen: jnp.ndarray | None = None) -> SolveOut:
+             frozen: jnp.ndarray | None = None,
+             use_kernels: bool | None = None) -> SolveOut:
+    """``use_kernels`` selects the Pallas fitness path (bit-exact equal to
+    the jnp path); ``None`` defers to ``REPRO_KERNELS`` / the backend
+    default — see :func:`repro.core.solvers.common.population_fitness`."""
     T = inst.T
     # Frozen tasks (rolling replans) keep their exact priorities: init noise
     # and mutations are masked, and crossover mixes identical frozen genes.
     free = (jnp.ones((T,), bool) if frozen is None else ~frozen)
     sweeps = 0 if objective == "makespan" else cfg.sweeps
-    fit_v = jax.vmap(lambda p, a: common.fitness_fn(
+    fit_v = lambda p, a: common.population_fitness(  # noqa: E731
         inst, cum, deadline, p, a, objective, machine_rule, sweeps,
-        frozen=frozen))
+        frozen=frozen, use_kernels=use_kernels)
 
     k_init, k_assign, k_run = jax.random.split(key, 3)
     base = upward_rank(inst) if prio_init is None else prio_init

@@ -182,16 +182,29 @@ def _quantile_dirty(intensity: jnp.ndarray, sv: jnp.ndarray, n: jnp.ndarray,
     return intensity > quantile_threshold(sv, n, theta) + GATE_EPS
 
 
-@functools.partial(jax.jit, static_argnames=("max_window",))
+@functools.partial(jax.jit, static_argnames=("max_window", "use_kernels"))
 def dirty_mask(intensity: jnp.ndarray, theta: jnp.ndarray,
-               window: jnp.ndarray, max_window: int) -> jnp.ndarray:
+               window: jnp.ndarray, max_window: int,
+               use_kernels: bool | None = None) -> jnp.ndarray:
     """``dirty[t] = intensity[t] > quantile(intensity[t:t+window], theta)``.
 
     Replicates ``np.quantile``'s linear interpolation — including the
     truncated window near the end of the forecast — via a masked sort.
     ``theta`` and ``window`` are traced, so a policy grid vmaps over them;
     only ``max_window`` (the sort width) is static.
+
+    ``use_kernels`` (or ``REPRO_KERNELS``, resolved by
+    :func:`repro.kernels.ops.kernels_enabled`) swaps the masked sort for
+    the fused Pallas pass :func:`repro.kernels.ops.gate_threshold` —
+    **bit-exact equal** thresholds, so the mask is identical either way.
+    The ``GATE_EPS`` comparison stays here on both paths.  (The sweep
+    path keeps the jnp sort: its per-(instance, window) sort is *reused*
+    across thetas/stretches, a different trade.)
     """
+    from repro.kernels import ops  # deferred: keep core importable alone
+    if ops.kernels_enabled(use_kernels):
+        thr = ops.gate_threshold(intensity, theta, window, max_window)
+        return intensity > thr + GATE_EPS
     sv, n = sorted_windows(intensity, window, max_window)
     return _quantile_dirty(intensity, sv, n, theta)
 
@@ -319,7 +332,8 @@ def online_carbon_gated_jax(inst: PackedInstance, intensity,
                             theta: float = 0.5, window: int = 96,
                             stretch: float = 1.5,
                             machine_rule: str = "earliest_finish",
-                            soft: bool = False, temp: float = 0.05):
+                            soft: bool = False, temp: float = 0.05,
+                            use_kernels: bool | None = None):
     """Single-instance gated dispatch (mirrors ``online_carbon_gated``).
 
     Runs the greedy baseline first to set ``budget = int(stretch * makespan)``
@@ -332,6 +346,9 @@ def online_carbon_gated_jax(inst: PackedInstance, intensity,
     simulator) and whose soft fields carry ``jax.grad``-able start times at
     temperature ``temp``.  The relaxation contract (temp -> 0 == hard gate)
     lives in :mod:`repro.learn`.
+
+    ``use_kernels`` forwards to :func:`dirty_mask` (Pallas gate threshold;
+    bit-exact equal mask, identical schedule).
     """
     intensity = jnp.asarray(intensity)
     n_epochs = int(intensity.shape[0])
@@ -345,7 +362,7 @@ def online_carbon_gated_jax(inst: PackedInstance, intensity,
     ms0 = makespan(inst, g.start, g.assign)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
     dirty = dirty_mask(intensity, jnp.float32(theta), jnp.int32(window),
-                       max_window=int(window))
+                       max_window=int(window), use_kernels=use_kernels)
     return simulate_online(inst, dirty, budget, n_epochs=n_epochs,
                            machine_rule=machine_rule)
 

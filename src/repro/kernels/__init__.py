@@ -1,15 +1,22 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
   schedule_eval   — batched FJSP schedule carbon evaluation (the paper's
-                    solver fitness hot spot)
+                    solver fitness hot spot; feeds ``population_carbon``)
+  gate_quantile   — fused sorted-window quantile gate threshold (the
+                    online dispatcher hot spot; feeds ``gate_threshold``)
   flash_attention — causal/windowed GQA flash attention (train/prefill)
   ssd_scan        — Mamba2 SSD chunk scan with VMEM-resident state
 
 Each kernel: ``pl.pallas_call`` + explicit BlockSpec tiling in
 ``<name>.py``, a jit'd wrapper in ``ops.py``, a naive oracle in ``ref.py``.
-Tests sweep shapes/dtypes in ``interpret=True`` mode (CPU executes the
-kernel body); on TPU pass ``interpret=False`` (the ``ops`` default).
+The kernels take ``interpret`` as a *required* keyword; the backend-aware
+default (interpret on CPU, compiled on TPU) lives only in ``ops.py`` —
+call through the wrappers.  ``ops.kernels_enabled()`` resolves the
+``REPRO_KERNELS`` switch the solvers consult; both solver paths are
+bit-exact equal (see ``docs/kernels.md``).
 """
-from repro.kernels.ops import flash_attention, population_carbon, ssd_scan
+from repro.kernels.ops import (flash_attention, gate_threshold,
+                               kernels_enabled, population_carbon, ssd_scan)
 
-__all__ = ["flash_attention", "population_carbon", "ssd_scan"]
+__all__ = ["flash_attention", "gate_threshold", "kernels_enabled",
+           "population_carbon", "ssd_scan"]

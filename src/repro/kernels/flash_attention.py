@@ -85,11 +85,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            causal: bool = True, window: int = 0,
                            block_q: int = 256, block_k: int = 256,
-                           interpret: bool = True) -> jnp.ndarray:
+                           *, interpret: bool) -> jnp.ndarray:
     """q [B, H, Sq, dh]; k, v [B, KVH, Skv, dh] (H % KVH == 0).
 
-    Returns [B, H, Sq, dh] in q.dtype.  ``interpret=True`` validates the
-    kernel body on CPU; pass False on TPU.
+    Returns [B, H, Sq, dh] in q.dtype.  ``interpret`` is **required**:
+    callers go through :mod:`repro.kernels.ops`, where the backend-aware
+    default lives (``interpret=True`` validates the kernel body on CPU;
+    ``interpret=False`` compiles for TPU).
     """
     B, H, Sq, dh = q.shape
     KVH, Skv = k.shape[1], k.shape[2]

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused sorted-window quantile gate threshold.
+
+The online dispatcher's second measured hot spot (after population
+fitness) is the carbon gate: for every epoch ``t``, the ``theta``-quantile
+of the forecast window ``intensity[t : t + window]`` decides whether ready
+tasks wait (:func:`repro.core.solvers.online_jax.sorted_windows` +
+:func:`~repro.core.solvers.online_jax.quantile_threshold`).  The jnp path
+materializes and sorts an ``[E, W]`` window matrix in HBM; this kernel
+fuses window construction, selection and the quantile interpolation into
+one pass over the horizon with the windows resident in VMEM — the ``[E,
+W]`` matrix never exists outside a block.
+
+No sort: the interpolated quantile needs only *two order statistics* per
+window (``floor(theta * (n-1))`` and its successor), so the kernel selects
+them by stable rank counting —
+
+    rank[w] = #{u : x[u] < x[w]}  +  #{u < w : x[u] == x[w]}
+
+— an O(W^2) compare-and-count per window that is pure VPU work (W <= 128
+lanes), needs no sort network, and *selects* values rather than computing
+with them.  Selection makes the bit-exactness contract provable: the
+chosen order statistics are bitwise the values ``jnp.sort`` would place at
+those positions (stable ranks are a permutation; ties share one value).
+The kernel therefore returns ``(a, b, n)`` — the two selected statistics
+and the valid count — and the *wrapper*
+(:func:`repro.kernels.ops.gate_threshold`) applies ``np.quantile``'s lerp
+in the identical expression shape :func:`quantile_threshold` uses, so
+both lower to the same XLA elementwise graph (same fused-multiply-add
+decisions) and kernel == jnp path bit-for-bit — the contract
+``tests/test_kernels.py`` property-tests.  (Computing the lerp *inside*
+the kernel came out one ulp off on some windows: the Pallas interpreter
+and the jnp graph made different mul+add contraction choices.)
+
+Windows are shifted slices of the horizon, so each epoch block loads one
+``[be + W]`` stretch of the VMEM-resident trace and builds its ``[be, W]``
+window block from static sub-slices — no gathers anywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _kernel(int_ref, theta_ref, win_ref, a_ref, b_ref, n_ref, *,
+            n_epochs: int, max_window: int, block_epochs: int, w_pad: int):
+    """One epoch block: intensity (full, padded) -> (a, b, n) [be] each.
+
+    int_ref: [Ipad] f32; theta_ref: [be] f32; win_ref: [1] i32 (the traced
+    window length); a/b: the ``floor(theta*(n-1))``-th and successor order
+    statistics of each window; n: its valid count.
+    """
+    be = block_epochs
+    t0 = pl.multiple_of(pl.program_id(0) * be, be)
+    window = win_ref[0]
+
+    # Window block [be, Wp]: row i = intensity[t0+i : t0+i+Wp] — static
+    # sub-slices of one VMEM-resident trace, shifted by one per row.
+    win = jnp.stack([int_ref[pl.ds(t0 + i, w_pad)] for i in range(be)])
+    off = jax.lax.broadcasted_iota(jnp.int32, (be, w_pad), 1)
+    epoch = jax.lax.broadcasted_iota(jnp.int32, (be, w_pad), 0) + t0
+    valid = (off < window) & (off < max_window) & (epoch + off < n_epochs)
+    win = jnp.where(valid, win, jnp.inf)          # invalid slots sort last
+    n = jnp.sum(valid.astype(jnp.int32), axis=1)  # [be]
+
+    # Selection indices — the exact index arithmetic of quantile_threshold
+    # (vi is one multiply and floor is exact, so lo_i/hi_i are bitwise the
+    # indices the jnp path gathers at; the *lerp* happens in the wrapper).
+    vi = theta_ref[...].astype(jnp.float32) * (n - 1).astype(jnp.float32)
+    lo_i = jnp.floor(vi).astype(jnp.int32)
+    hi_i = jnp.minimum(lo_i + 1, n - 1)
+
+    # Stable rank of every slot; valid slots get a permutation of 0..n-1
+    # (ties broken by position), +inf slots rank >= n — never selected.
+    x_w = win[:, :, None]                          # [be, Wp(w), 1]
+    x_u = win[:, None, :]                          # [be, 1, Wp(u)]
+    before = (jax.lax.broadcasted_iota(jnp.int32, (w_pad, w_pad), 1)
+              < jax.lax.broadcasted_iota(jnp.int32, (w_pad, w_pad), 0))
+    rank = (jnp.sum((x_u < x_w).astype(jnp.int32), axis=2)
+            + jnp.sum(((x_u == x_w) & before[None]).astype(jnp.int32),
+                      axis=2))                     # [be, Wp]
+
+    # Select the two order statistics (exactly one slot matches each rank;
+    # summing the zeros is the identity, so the selection is exact).
+    a_ref[...] = jnp.sum(jnp.where(rank == lo_i[:, None], win, 0.0), axis=1)
+    b_ref[...] = jnp.sum(jnp.where(rank == hi_i[:, None], win, 0.0), axis=1)
+    n_ref[...] = n
+
+
+@functools.partial(jax.jit, static_argnames=("max_window", "block_epochs",
+                                             "interpret"))
+def gate_quantile_stats_pallas(intensity: jnp.ndarray, theta: jnp.ndarray,
+                               window: jnp.ndarray, *, max_window: int,
+                               interpret: bool, block_epochs: int = 8
+                               ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """intensity [E] f32; theta [E] f32 (per-epoch — broadcast a scalar
+    upstream); window scalar/[1] i32 (traced; capped by ``max_window``,
+    the static width, exactly like the jnp path's array width caps it).
+    Returns ``(a, b, n)``, each [E]: the two order statistics
+    ``np.quantile``'s lerp interpolates between (bitwise the values
+    ``sorted_windows``' sort would place at those positions) and the valid
+    window length.  The wrapper (:func:`repro.kernels.ops.gate_threshold`)
+    finishes the lerp in :func:`quantile_threshold`'s exact expression.
+
+    ``interpret`` is **required**: callers go through
+    :mod:`repro.kernels.ops`, where the backend-aware default lives.
+
+    Epochs past the horizon (block padding) select from all-invalid
+    windows; they are sliced off before returning.
+    """
+    E = intensity.shape[0]
+    be = block_epochs
+    Ep = -(-E // be) * be
+    Wp = -(-max_window // LANE) * LANE
+    Ipad = -(-(Ep + Wp) // LANE) * LANE
+
+    intp = jnp.pad(intensity.astype(jnp.float32), (0, Ipad - E))
+    thetap = jnp.pad(theta.astype(jnp.float32), (0, Ep - E))
+    win1 = jnp.reshape(window.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_kernel, n_epochs=E, max_window=max_window,
+                               block_epochs=be, w_pad=Wp)
+    a, b, n = pl.pallas_call(
+        kernel,
+        grid=(Ep // be,),
+        in_specs=[
+            pl.BlockSpec((Ipad,), lambda p: (0,)),
+            pl.BlockSpec((be,), lambda p: (p,)),
+            pl.BlockSpec((1,), lambda p: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((be,), lambda p: (p,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((Ep,), jnp.float32),
+                   jax.ShapeDtypeStruct((Ep,), jnp.float32),
+                   jax.ShapeDtypeStruct((Ep,), jnp.int32)],
+        interpret=interpret,
+    )(intp, thetap, win1)
+    return a[:E], b[:E], n[:E]

@@ -1,10 +1,21 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Each op accepts the framework-native layouts, handles padding/reshaping,
-and dispatches to the kernel (``interpret=True`` on CPU — the validation
-mode — and ``interpret=False`` on TPU).  ``on_tpu()`` picks the default.
+and dispatches to the kernel.  **This module is the single home of the
+backend-aware ``interpret`` default** (``interpret=True`` emulates the
+kernel on CPU — the validation mode — ``interpret=False`` compiles for
+TPU; ``on_tpu()`` picks).  The kernels themselves take ``interpret`` as a
+required keyword so a direct call can never silently run the interpreter
+on a TPU — go through these wrappers.
+
+``kernels_enabled()`` resolves the ``REPRO_KERNELS`` switch the solvers
+consult when deciding between the Pallas fast path and the reference jnp
+path.  Both paths are **bit-exact equal** (see ``docs/kernels.md``); the
+switch trades nothing but speed.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,12 +23,33 @@ import jax.numpy as jnp
 from repro.core.instance import PackedInstance
 from repro.core.objectives import task_durations
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.schedule_eval import schedule_carbon_pallas
+from repro.kernels.gate_quantile import gate_quantile_stats_pallas
+from repro.kernels.schedule_eval import schedule_delta_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def kernels_enabled(flag: bool | None = None) -> bool:
+    """Resolve the kernel-path switch.
+
+    Explicit argument wins; else the ``REPRO_KERNELS`` env var ("1"/"true"/
+    "on"/"yes" → True, "0"/"false"/"off"/"no" → False); else default to the
+    kernels exactly where they pay: on TPU.  NB the env var is read at
+    *trace* time — flipping it after a jitted solver has cached its trace
+    has no effect on that cache; tests and long-lived services should pass
+    the explicit ``use_kernels`` argument instead.
+    """
+    if flag is not None:
+        return flag
+    env = os.environ.get("REPRO_KERNELS", "").strip().lower()
+    if env in ("1", "true", "on", "yes"):
+        return True
+    if env in ("0", "false", "off", "no"):
+        return False
+    return on_tpu()
 
 
 def population_carbon(inst: PackedInstance, starts: jnp.ndarray,
@@ -27,13 +59,45 @@ def population_carbon(inst: PackedInstance, starts: jnp.ndarray,
 
     The solver hot spot (fitness evaluation) as one kernel call: durations
     and powers are pre-gathered per candidate (cheap XLA gathers), the
-    trace integral runs in the Pallas kernel.
+    trace integral ``cum[e1] - cum[e0]`` runs in the Pallas kernel, and
+    the masked power-weighted reduction stays out here in the *same
+    expression* :func:`repro.core.objectives.carbon` uses — so this equals
+    ``vmap(carbon)`` bit-for-bit (the property ``tests/test_kernels.py``
+    locks across scenario families x fleets x machine rules).
     """
     interpret = (not on_tpu()) if interpret is None else interpret
     dur = jax.vmap(lambda a: task_durations(inst, a))(assigns)
-    power = inst.power[assigns] * inst.task_mask[None, :]
-    return schedule_carbon_pallas(starts, dur, power.astype(jnp.float32),
-                                  cum, interpret=interpret)
+    delta = schedule_delta_pallas(starts, dur, cum, interpret=interpret)
+    g = inst.power[assigns] * delta
+    return jnp.sum(jnp.where(inst.task_mask[None, :], g, 0.0), axis=-1)
+
+
+def gate_threshold(intensity: jnp.ndarray, theta: jnp.ndarray,
+                   window: jnp.ndarray, max_window: int,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """Per-epoch quantile gate threshold [E] — the fused replacement for
+    ``sorted_windows`` + ``quantile_threshold`` in the online dispatcher.
+
+    ``theta`` may be a scalar or per-epoch [E]; ``window`` is the traced
+    window length (dynamic, <= the static ``max_window`` sort width).
+    Bit-exact with the jnp pair above: the kernel *selects* the two order
+    statistics and the valid count, and the lerp below is op-for-op
+    ``quantile_threshold``'s expression (same XLA elementwise graph, same
+    fused-multiply-add decisions).  The gate *comparison* against the
+    threshold stays in :mod:`repro.core.solvers.online_jax`.
+    """
+    interpret = (not on_tpu()) if interpret is None else interpret
+    theta_vec = jnp.broadcast_to(jnp.asarray(theta, jnp.float32),
+                                 intensity.shape)
+    a, b, n = gate_quantile_stats_pallas(intensity, theta_vec, window,
+                                         max_window=max_window,
+                                         interpret=interpret)
+    vi = theta_vec.astype(jnp.float32) * (n - 1).astype(jnp.float32)
+    gamma = vi - jnp.floor(vi)
+    diff = b - a
+    # np.quantile's _lerp switches formula at gamma >= 0.5 for accuracy.
+    return jnp.where(gamma >= 0.5, b - diff * (1.0 - gamma),
+                     a + diff * gamma)
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -18,6 +18,33 @@ def schedule_carbon_ref(start: jnp.ndarray, dur: jnp.ndarray,
     return jnp.sum(power * (cum[s1] - cum[s0]), axis=1)
 
 
+def gate_threshold_ref(intensity: jnp.ndarray, theta: jnp.ndarray,
+                       window: jnp.ndarray, max_window: int) -> jnp.ndarray:
+    """Per-epoch window quantile via a full [E, W] sort — the naive gate.
+
+    Identical math to ``online_jax.sorted_windows`` + ``quantile_threshold``
+    (np.quantile's lerp over a masked sort), restated here so the kernel
+    test target doesn't share code with the production jnp path.
+    """
+    E = intensity.shape[0]
+    off = jnp.arange(max_window)
+    idx = jnp.arange(E)[:, None] + off[None, :]
+    valid = (off[None, :] < window) & (idx < E)
+    sv = jnp.sort(jnp.where(valid, intensity[jnp.clip(idx, 0, E - 1)],
+                            jnp.inf), axis=1)
+    n = valid.sum(1)
+    vi = theta.astype(jnp.float32) * (n - 1).astype(jnp.float32)
+    lo = jnp.floor(vi)
+    gamma = vi - lo
+    lo_i = lo.astype(jnp.int32)
+    hi_i = jnp.minimum(lo_i + 1, n - 1)
+    a = jnp.take_along_axis(sv, lo_i[:, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(sv, hi_i[:, None], axis=1)[:, 0]
+    diff = b - a
+    return jnp.where(gamma >= 0.5, b - diff * (1.0 - gamma),
+                     a + diff * gamma)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: int = 0) -> jnp.ndarray:
     """q [B,H,S,dh]; k,v [B,KVH,Skv,dh]. Full-matrix softmax attention."""

@@ -12,14 +12,26 @@ gather into a one-hot x trace product on the MXU/VPU:
 Tiling: grid over population blocks (``bp`` candidates) x task blocks
 (``bt`` tasks, lane-aligned); the horizon axis H lives fully in VMEM
 (a year of 15-min epochs = 35k floats = 137 KiB — trivially resident).
-Per-tile VMEM: bp*bt*(3 i32/f32 inputs) + the [bp*bt, H] one-hot is never
-materialized — the kernel loops over H in 128-wide slabs, comparing a
-broadcasted iota against e0/e1 and accumulating, keeping the working set
-at ``bp*bt*128`` floats.
+The [bp*bt, H] one-hot is never materialized — a ``fori_loop`` walks H in
+128-wide slabs, comparing a broadcasted iota against e0/e1 and
+accumulating, keeping the working set at ``bp*bt*128`` floats.  (An
+earlier revision unrolled that walk as a Python loop: a year-long trace
+unrolled ~274 einsums into the kernel body and blew up compile time; the
+``fori_loop`` emits one body regardless of horizon.)
 
-Accumulation across task blocks uses the sequential innermost grid dim
-(scratch carries the per-candidate partial sums; flushed at the last
-task block).
+Bit-exactness (the contract ``repro.kernels.ops.population_carbon`` is
+property-tested under): the kernel returns the per-task trace deltas
+``cum[e1] - cum[e0]`` and leaves the masked, power-weighted reduction to
+the wrapper, which uses the *same expression* as
+:func:`repro.core.objectives.carbon`.  Each delta is exact — every slab
+product has at most two nonzero terms (+cum[e1], -cum[e0]; IEEE addition
+of zeros is the identity and addition is commutative, so the slab
+accumulation reproduces a single f32 subtract bit-for-bit) — so the
+kernel path equals the jnp gather path bitwise, not just allclose.
+Start/end epochs are clamped into ``[0, H]`` exactly as the jnp oracle
+clips them; candidates overrunning the trace (routine for infeasible SA
+proposals before the penalty prices them) integrate to the trace edge
+instead of reading zero padding.
 """
 from __future__ import annotations
 
@@ -28,55 +40,54 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 LANE = 128
 
 
-def _kernel(start_ref, dur_ref, power_ref, cum_ref, out_ref, acc_ref,
-            *, n_task_blocks: int, horizon: int):
+def _kernel(start_ref, dur_ref, cum_ref, out_ref, *, n_slabs: int,
+            horizon: int):
     """One (pop-block, task-block) tile.
 
-    start/dur/power: [bp, bt]; cum: [H1] (full); out: [bp]; acc: [bp] f32.
+    start/dur: [bp, bt] i32; cum: [Hp] (full, VMEM-resident);
+    out: [bp, bt] f32 per-task deltas ``cum[e1] - cum[e0]``.
     """
-    tb = pl.program_id(1)
+    s0 = jnp.clip(start_ref[...], 0, horizon)             # [bp, bt] i32
+    e1 = jnp.clip(start_ref[...] + dur_ref[...], 0, horizon)
 
-    @pl.when(tb == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    s0 = start_ref[...]
-    e1 = s0 + dur_ref[...]                        # [bp, bt] i32
-    pw = power_ref[...]                           # [bp, bt] f32 (0 = masked)
-
-    partial = jnp.zeros(s0.shape, jnp.float32)
-    for h0 in range(0, horizon, LANE):
-        cum_slab = cum_ref[h0:h0 + LANE]          # [LANE]
+    def slab(i, acc):
+        h0 = pl.multiple_of(i * LANE, LANE)
+        cum_slab = cum_ref[pl.ds(h0, LANE)]               # [LANE]
         idx = jax.lax.broadcasted_iota(jnp.int32, (LANE,), 0) + h0
-        # delta contribution: +cum[e1] - cum[e0] via masked slab sums.
+        # delta contribution: +cum[e1] - cum[e0] via masked slab products.
         m1 = (e1[..., None] == idx).astype(jnp.float32)
         m0 = (s0[..., None] == idx).astype(jnp.float32)
-        partial += jnp.einsum("pth,h->pt", m1 - m0, cum_slab,
-                              preferred_element_type=jnp.float32)
-    acc_ref[...] += jnp.sum(partial * pw, axis=1)
+        # <= 2 nonzero terms per (p, t) row -> the dot is exact in f32
+        # (HIGHEST keeps the TPU MXU from dropping to bf16 passes).
+        return acc + jnp.einsum("pth,h->pt", m1 - m0, cum_slab,
+                                preferred_element_type=jnp.float32,
+                                precision=jax.lax.Precision.HIGHEST)
 
-    @pl.when(tb == n_task_blocks - 1)
-    def _flush():
-        out_ref[...] = acc_ref[...]
+    out_ref[...] = jax.lax.fori_loop(
+        0, n_slabs, slab, jnp.zeros(s0.shape, jnp.float32))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_pop", "block_task", "interpret"))
-def schedule_carbon_pallas(start: jnp.ndarray, dur: jnp.ndarray,
-                           power: jnp.ndarray, cum: jnp.ndarray,
-                           block_pop: int = 8, block_task: int = 128,
-                           interpret: bool = True) -> jnp.ndarray:
-    """start/dur [Pop, T] i32; power [Pop, T] f32 (0 for padded/masked
-    tasks); cum [H+1] f32.  Returns carbon [Pop] f32.
+def schedule_delta_pallas(start: jnp.ndarray, dur: jnp.ndarray,
+                          cum: jnp.ndarray, *, interpret: bool,
+                          block_pop: int = 8,
+                          block_task: int = 128) -> jnp.ndarray:
+    """start/dur [Pop, T] i32; cum [H+1] f32.  Returns the per-task trace
+    deltas ``cum[clip(s+d)] - cum[clip(s)]`` as [Pop, T] f32.
 
-    Pads Pop/T to block multiples and H+1 to a lane multiple.  ``interpret``
-    runs the kernel body on CPU (how tests validate it); on TPU pass
-    ``interpret=False``.
+    Pads Pop/T to block multiples and H+1 to a lane multiple; end epochs
+    are clamped to the real horizon ``H`` (never the padding), matching
+    :func:`repro.core.objectives.carbon`'s clipping bit-exactly.
+
+    ``interpret`` is **required**: callers go through
+    :mod:`repro.kernels.ops`, where the backend-aware default lives
+    (``interpret=True`` emulates the kernel body on CPU — the validation
+    mode — ``interpret=False`` compiles for TPU).
     """
     P, T = start.shape
     Pp = -(-P // block_pop) * block_pop
@@ -84,27 +95,23 @@ def schedule_carbon_pallas(start: jnp.ndarray, dur: jnp.ndarray,
     H1 = cum.shape[0]
     Hp = -(-H1 // LANE) * LANE
 
-    pad2 = lambda a, v=0: jnp.pad(a, ((0, Pp - P), (0, Tp - T)),  # noqa: E731
-                                  constant_values=v)
+    pad2 = lambda a: jnp.pad(a, ((0, Pp - P), (0, Tp - T)))  # noqa: E731
     startp = pad2(start)
     durp = pad2(dur)
-    powerp = pad2(power)          # padded tasks have power 0 -> no effect
     cump = jnp.pad(cum, (0, Hp - H1))
 
     grid = (Pp // block_pop, Tp // block_task)
-    kernel = functools.partial(_kernel, n_task_blocks=grid[1], horizon=Hp)
+    kernel = functools.partial(_kernel, n_slabs=Hp // LANE, horizon=H1 - 1)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_pop, block_task), lambda p, t: (p, t)),
             pl.BlockSpec((block_pop, block_task), lambda p, t: (p, t)),
-            pl.BlockSpec((block_pop, block_task), lambda p, t: (p, t)),
             pl.BlockSpec((Hp,), lambda p, t: (0,)),
         ],
-        out_specs=pl.BlockSpec((block_pop,), lambda p, t: (p,)),
-        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_pop,), jnp.float32)],
+        out_specs=pl.BlockSpec((block_pop, block_task), lambda p, t: (p, t)),
+        out_shape=jax.ShapeDtypeStruct((Pp, Tp), jnp.float32),
         interpret=interpret,
-    )(startp, durp, powerp, cump)
-    return out[:P]
+    )(startp, durp, cump)
+    return out[:P, :T]

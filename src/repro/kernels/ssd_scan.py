@@ -72,9 +72,12 @@ def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, hout_ref, *,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
                     Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int = 64,
-                    interpret: bool = True):
+                    *, interpret: bool):
     """x [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (<0);
-    Bm/Cm [B,S,G,N].  Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    Bm/Cm [B,S,G,N].  Returns (y [B,S,H,P], h_final [B,H,P,N]).
+
+    ``interpret`` is **required**: callers go through
+    :mod:`repro.kernels.ops`, where the backend-aware default lives."""
     Bsz, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G

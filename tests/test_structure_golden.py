@@ -49,7 +49,7 @@ def _tiny_rows(devices=None):
     return rows, meta
 
 
-def _bench_online_cell():
+def _bench_online_cell(use_kernels=None):
     """Greedy + one gated policy on the first online_vs_offline instance."""
     from benchmarks.online_vs_offline import SIM_HORIZON
     from benchmarks.common import BenchSetup
@@ -70,7 +70,7 @@ def _bench_online_cell():
     cum = jnp.asarray(w.cumulative())
     g = online_greedy_jax(p, SIM_HORIZON)
     c = online_carbon_gated_jax(p, w.intensity, theta=0.3, window=48,
-                                stretch=1.25)
+                                stretch=1.25, use_kernels=use_kernels)
     base = evaluate(p, g.start, g.assign, cum)
     gated = evaluate(p, c.start, c.assign, cum)
     return {
@@ -183,6 +183,23 @@ def test_bench_online_cell_matches_golden():
     for k in ("greedy_carbon_g", "gated_carbon_g", "savings_pct"):
         np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=2e-3,
                                    err_msg=k)
+
+
+def test_bench_online_cell_golden_unchanged_under_kernels():
+    """The stored golden must hold with the Pallas gate kernel enabled —
+    the dispatcher's quantile gate is bit-exact vs the jnp path
+    (docs/kernels.md), so flipping ``REPRO_KERNELS`` may not move a single
+    locked number, makespans included."""
+    golden = _load_golden()
+    got = _bench_online_cell(use_kernels=True)
+    want = golden["bench_online_cell"]
+    assert got["greedy_makespan"] == want["greedy_makespan"]
+    assert got["gated_makespan"] == want["gated_makespan"]
+    for k in ("greedy_carbon_g", "gated_carbon_g", "savings_pct"):
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=2e-3,
+                                   err_msg=k)
+    # stronger than the golden tolerance: the two paths agree exactly
+    assert got == _bench_online_cell(use_kernels=False)
 
 
 def _write_golden():
