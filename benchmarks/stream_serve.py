@@ -23,8 +23,14 @@ under ``experiments/bench/``.  Expected shape: savings stay roughly flat
 with load (the gate is per-job) while queue delay grows superlinearly as
 load approaches 1 — and faster for the bursty family at equal load.
 
-    python -m benchmarks.stream_serve            # full grid
-    python -m benchmarks.stream_serve --tiny     # CI smoke grid
+With ``--shared-fleet`` every cell also runs against ONE shared machine set
+(``StreamConfig.shared_fleet=True``: lanes contend for machines inside the
+epoch, the paper's common-fleet model) and the report gains per-cell
+queue-delay/savings deltas vs the partitioned baseline.
+
+    python -m benchmarks.stream_serve                   # full grid
+    python -m benchmarks.stream_serve --tiny            # CI smoke grid
+    python -m benchmarks.stream_serve --shared-fleet    # both fleet modes
 """
 from __future__ import annotations
 
@@ -97,18 +103,19 @@ def _round_dist(d: dict) -> dict:
             for k, v in d.items()}
 
 
-def _cell_config(knobs: dict, family: str, rate: float,
-                 seed: int) -> StreamConfig:
+def _cell_config(knobs: dict, family: str, rate: float, seed: int,
+                 shared_fleet: bool = False) -> StreamConfig:
     return StreamConfig(arrivals=family, rate=rate, horizon=knobs["horizon"],
                         n_lanes=knobs["n_lanes"], family=knobs["family"],
                         width=knobs["width"], depth=knobs["depth"],
                         n_machines=knobs["n_machines"], fleet=knobs["fleet"],
-                        mean_dur=knobs["mean_dur"], seed=seed)
+                        mean_dur=knobs["mean_dur"], seed=seed,
+                        shared_fleet=shared_fleet)
 
 
 def run_cell(knobs: dict, family: str, load: float, rate: float,
-             seed: int) -> dict:
-    cfg = _cell_config(knobs, family, rate, seed)
+             seed: int, shared_fleet: bool = False) -> dict:
+    cfg = _cell_config(knobs, family, rate, seed, shared_fleet=shared_fleet)
     t0 = time.time()
     res = simulate_stream(cfg)
     seconds = time.time() - t0
@@ -120,11 +127,13 @@ def run_cell(knobs: dict, family: str, load: float, rate: float,
     return {
         "arrivals": family,
         "load": load,
+        "shared_fleet": shared_fleet,
         "rate_jobs_per_epoch": round(rate, 5),
         "n_jobs": len(res.jobs),
         "n_admitted": s["jobs_admitted"],
         "n_rejected": s["jobs_rejected"],
         "n_finished": n_finished,
+        "n_truncated": s["jobs_truncated"],
         "n_unfinished": len(res.jobs) - n_finished,
         "final_lane_occupancy": s["final_lane_occupancy"],
         "seconds": round(seconds, 3),
@@ -155,24 +164,61 @@ def export_trace(path: str, seed: int = 2024) -> str:
     return path
 
 
+def _fleet_deltas(rows: list[dict]) -> list[dict]:
+    """Per-(family, load) shared-minus-partitioned deltas: the contention
+    cost (queue delay up) and gate-interaction cost (savings down) of one
+    common machine set vs disjoint per-lane partitions."""
+    part = {(r["arrivals"], r["load"]): r for r in rows
+            if not r["shared_fleet"]}
+    out = []
+    for r in rows:
+        if not r["shared_fleet"]:
+            continue
+        p = part.get((r["arrivals"], r["load"]))
+        if p is None:
+            continue
+        out.append({
+            "arrivals": r["arrivals"],
+            "load": r["load"],
+            "queue_delay_mean_delta": round(
+                r["queue_delay_epochs"]["mean"]
+                - p["queue_delay_epochs"]["mean"], 3),
+            "queue_delay_p90_delta": round(
+                r["queue_delay_epochs"]["p90"]
+                - p["queue_delay_epochs"]["p90"], 3),
+            "savings_mean_delta_pct": round(
+                r["carbon_savings_pct"]["mean"]
+                - p["carbon_savings_pct"]["mean"], 3),
+            "finished_delta": r["n_finished"] - p["n_finished"],
+        })
+    return out
+
+
 def run(tiny: bool = False, out: str | None = None,
-        seed: int = 2024) -> list[dict]:
+        seed: int = 2024, shared_fleet: bool = False) -> list[dict]:
+    """``shared_fleet=True`` runs each cell in BOTH fleet modes (partitioned
+    baseline + one shared machine set) and reports per-cell deltas."""
     knobs = dict(TINY if tiny else FULL)
     loads = knobs.pop("loads")
     families = knobs.pop("families")
     service = probe_service_epochs(knobs, seed)
     capacity = knobs["n_lanes"] / service      # jobs/epoch the pool clears
+    fleet_modes = (False, True) if shared_fleet else (False,)
     # Warmup cell outside the clock so per-cell seconds are post-compile.
-    run_cell(knobs, families[0], loads[0], loads[0] * capacity, seed)
+    for sf in fleet_modes:
+        run_cell(knobs, families[0], loads[0], loads[0] * capacity, seed,
+                 shared_fleet=sf)
 
     t0 = time.time()
-    rows = [run_cell(knobs, fam, load, load * capacity, seed)
-            for fam in families for load in loads]
+    rows = [run_cell(knobs, fam, load, load * capacity, seed,
+                     shared_fleet=sf)
+            for sf in fleet_modes for fam in families for load in loads]
     seconds = time.time() - t0
 
     record = {
         "bench": "stream_serve",
         "mode": "tiny" if tiny else "full",
+        "shared_fleet_axis": shared_fleet,
         "seconds": round(seconds, 3),
         "timing": bench_timing(seconds),
         "seed": seed,
@@ -181,6 +227,8 @@ def run(tiny: bool = False, out: str | None = None,
         **{k: v for k, v in knobs.items()},
         "cells": rows,
     }
+    if shared_fleet:
+        record["fleet_deltas"] = _fleet_deltas(rows)
     write_json(out or BENCH_JSON, record)
     write_csv("stream_serve" + ("_tiny" if tiny else ""),
               [{k: v for k, v in r.items() if not isinstance(v, dict)}
@@ -190,11 +238,16 @@ def run(tiny: bool = False, out: str | None = None,
           f"{seconds:.1f}s (service={service:.1f} epochs, "
           f"capacity={capacity:.4f} jobs/epoch)", flush=True)
     for r in rows:
-        print(f"#   {r['arrivals']:>7} load={r['load']:.1f}: "
+        tag = " shared" if r["shared_fleet"] else ""
+        print(f"#   {r['arrivals']:>7} load={r['load']:.1f}{tag}: "
               f"{r['n_finished']}/{r['n_jobs']} finished, "
               f"delay p90={r['queue_delay_epochs']['p90']}, "
               f"savings mean={r['carbon_savings_pct']['mean']}%, "
               f"{r['jobs_per_sec']} jobs/s", flush=True)
+    for d in record.get("fleet_deltas", ()):
+        print(f"#   delta {d['arrivals']:>7} load={d['load']:.1f}: "
+              f"delay mean {d['queue_delay_mean_delta']:+.2f} epochs, "
+              f"savings {d['savings_mean_delta_pct']:+.2f}pp", flush=True)
     return rows
 
 
@@ -208,6 +261,9 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke grid")
+    ap.add_argument("--shared-fleet", action="store_true",
+                    help="add the shared-fleet axis: run every cell in both "
+                         "fleet modes and report contention deltas")
     ap.add_argument("--seed", type=int, default=2024)
     ap.add_argument("--out", type=str, default=None,
                     help=f"output JSON path (default {BENCH_JSON})")
@@ -218,7 +274,8 @@ def main() -> None:
     if args.trace_out:
         export_trace(args.trace_out, seed=args.seed)
         return
-    run(tiny=args.tiny, out=args.out, seed=args.seed)
+    run(tiny=args.tiny, out=args.out, seed=args.seed,
+        shared_fleet=args.shared_fleet)
 
 
 if __name__ == "__main__":

@@ -84,6 +84,12 @@ class DispatchState(NamedTuple):
     advance the whole pool one epoch at a time with :func:`dispatch_epoch` —
     inserting and evicting jobs between epochs the way the serve engine
     inserts and evicts decode lanes between token steps.
+
+    The task-side fields and the machine axis split apart as
+    (:class:`LaneState`, ``mfree``) for callers whose machines are *not* owned
+    by one instance — the shared-fleet streaming pool threads one global
+    ``mfree`` through every lane's :func:`dispatch_epoch_shared` while each
+    lane keeps its own :class:`LaneState`.
     """
 
     scheduled: jnp.ndarray  # bool  [T] — placed on a machine
@@ -95,14 +101,41 @@ class DispatchState(NamedTuple):
     def schedule(self) -> OnlineSchedule:
         return OnlineSchedule(self.start, self.assign, self.scheduled)
 
+    def split(self) -> tuple["LaneState", jnp.ndarray]:
+        """(task-side state, machine free-times) — the shared-fleet view."""
+        return LaneState(self.scheduled, self.comp, self.start,
+                         self.assign), self.mfree
+
+
+class LaneState(NamedTuple):
+    """Task-side half of :class:`DispatchState` — no machine axis.
+
+    What one streaming *lane* owns when the fleet is shared: its tasks'
+    placement progress.  Machine free-times live outside (pool-global for a
+    shared fleet, per-lane ``[L, M]`` for partitioned lanes) and are threaded
+    through :func:`dispatch_epoch_shared` explicitly.
+    """
+
+    scheduled: jnp.ndarray  # bool  [T]
+    comp: jnp.ndarray       # int32 [T]
+    start: jnp.ndarray      # int32 [T]
+    assign: jnp.ndarray     # int32 [T]
+
+    def merge(self, mfree: jnp.ndarray) -> DispatchState:
+        return DispatchState(self.scheduled, self.comp, mfree,
+                             self.start, self.assign)
+
+
+def init_lane_state(T: int) -> LaneState:
+    """All-zeros task-side state (nothing scheduled)."""
+    return LaneState(jnp.zeros((T,), bool), jnp.zeros((T,), jnp.int32),
+                     jnp.zeros((T,), jnp.int32), jnp.zeros((T,), jnp.int32))
+
 
 def init_dispatch_state(T: int, M: int) -> DispatchState:
     """The all-zeros state every simulation starts from (and the inert state
     a padding lane carries: nothing scheduled, every machine free)."""
-    return DispatchState(jnp.zeros((T,), bool), jnp.zeros((T,), jnp.int32),
-                         jnp.zeros((M,), jnp.int32),
-                         jnp.zeros((T,), jnp.int32),
-                         jnp.zeros((T,), jnp.int32))
+    return init_lane_state(T).merge(jnp.zeros((M,), jnp.int32))
 
 
 class SweepResult(NamedTuple):
@@ -209,22 +242,23 @@ def dirty_mask(intensity: jnp.ndarray, theta: jnp.ndarray,
     return _quantile_dirty(intensity, sv, n, theta)
 
 
-def dispatch_epoch(inst: PackedInstance, state: DispatchState,
-                   dirty_t: jnp.ndarray, budget: jnp.ndarray, t: jnp.ndarray,
-                   machine_rule: str = "earliest_finish",
-                   cp: jnp.ndarray | None = None,
-                   preds: jnp.ndarray | None = None) -> DispatchState:
-    """One epoch of the online dispatcher — the pool-step entry point.
+def dispatch_epoch_shared(inst: PackedInstance, lane: LaneState,
+                          mfree: jnp.ndarray, dirty_t: jnp.ndarray,
+                          budget: jnp.ndarray, t: jnp.ndarray,
+                          machine_rule: str = "earliest_finish",
+                          cp: jnp.ndarray | None = None,
+                          preds: jnp.ndarray | None = None
+                          ) -> tuple[LaneState, jnp.ndarray]:
+    """One epoch of the online dispatcher with an *external* machine axis.
 
-    Advances ``state`` across epoch ``t``: every task that has arrived, has
-    all predecessors complete, passes the gate (``dirty_t`` False, or waiting
-    would break ``budget``) and finds a free allowed machine is placed.
-    Applying this for ``t = 0 .. n_epochs - 2`` from
-    :func:`init_dispatch_state` reproduces :func:`simulate_online`
-    **bit-exactly** (it *is* that loop's body, hoisted) — which is how the
-    streaming engine (:mod:`repro.stream`) runs one jitted, vmapped step over
-    a whole pool of lanes per tick while inserting/evicting jobs between
-    ticks, and why its closed-batch dispatch matches the batched path.
+    The body of :func:`dispatch_epoch` with the machine free-times threaded
+    in and out explicitly instead of riding inside the state: placements made
+    here consume ``mfree`` that the *next* caller of this function sees.
+    That is the shared-fleet streaming contract — the pool tick ``lax.scan``s
+    this over lanes in priority order, so an earlier lane's placements shrink
+    the machine options of later lanes *within the same epoch*.  With a
+    per-lane ``mfree`` it degenerates to the partitioned :func:`dispatch_epoch`
+    (which delegates here), keeping one epoch body for both fleet modes.
 
     ``cp`` (:func:`downstream_critical_path`) and ``preds`` (the masked
     predecessor matrix) are recomputed from ``inst`` when not supplied;
@@ -245,7 +279,7 @@ def dispatch_epoch(inst: PackedInstance, state: DispatchState,
     # Epoch-invariant parts of eligibility: a predecessor placed *this*
     # epoch completes at t + dur > t, so it blocks successors exactly
     # like an unscheduled one — blocked needn't be recomputed per round.
-    blocked = jnp.any(preds & (~state.scheduled | (state.comp > t))[None, :],
+    blocked = jnp.any(preds & (~lane.scheduled | (lane.comp > t))[None, :],
                       axis=1)
     waiting = dirty_t & (t + 1 + cp <= budget)
     base = (inst.task_mask & (inst.arrival <= t) & ~blocked & ~waiting)
@@ -273,14 +307,46 @@ def dispatch_epoch(inst: PackedInstance, state: DispatchState,
                 start.at[tk].set(jnp.where(place, t, start[tk])),
                 assign.at[tk].set(jnp.where(place, m, assign[tk])))
 
-    return DispatchState(*jax.lax.fori_loop(0, inst.M, round_body,
-                                            tuple(state)))
+    scheduled, comp, mfree, start, assign = jax.lax.fori_loop(
+        0, inst.M, round_body,
+        (lane.scheduled, lane.comp, mfree, lane.start, lane.assign))
+    return LaneState(scheduled, comp, start, assign), mfree
+
+
+def dispatch_epoch(inst: PackedInstance, state: DispatchState,
+                   dirty_t: jnp.ndarray, budget: jnp.ndarray, t: jnp.ndarray,
+                   machine_rule: str = "earliest_finish",
+                   cp: jnp.ndarray | None = None,
+                   preds: jnp.ndarray | None = None) -> DispatchState:
+    """One epoch of the online dispatcher — the pool-step entry point.
+
+    Advances ``state`` across epoch ``t``: every task that has arrived, has
+    all predecessors complete, passes the gate (``dirty_t`` False, or waiting
+    would break ``budget``) and finds a free allowed machine is placed.
+    Applying this for ``t = 0 .. n_epochs - 2`` from
+    :func:`init_dispatch_state` reproduces :func:`simulate_online`
+    **bit-exactly** (it *is* that loop's body, hoisted) — which is how the
+    streaming engine (:mod:`repro.stream`) runs one jitted step over a whole
+    pool of lanes per tick while inserting/evicting jobs between ticks, and
+    why its closed-batch dispatch matches the batched path.
+
+    The epoch body itself lives in :func:`dispatch_epoch_shared`; this
+    wrapper owns the machines (``state.mfree`` is this instance's fleet).
+    Streaming pools that share one fleet across lanes call the shared form
+    directly with a pool-global ``mfree``.
+    """
+    lane, mfree = state.split()
+    lane, mfree = dispatch_epoch_shared(inst, lane, mfree, dirty_t, budget,
+                                        t, machine_rule=machine_rule, cp=cp,
+                                        preds=preds)
+    return lane.merge(mfree)
 
 
 @functools.partial(jax.jit, static_argnames=("n_epochs", "machine_rule"))
 def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
                     budget: jnp.ndarray, n_epochs: int,
-                    machine_rule: str = "earliest_finish") -> OnlineSchedule:
+                    machine_rule: str = "earliest_finish",
+                    state0: DispatchState | None = None) -> OnlineSchedule:
     """Run the event-driven dispatcher for epochs ``0 .. n_epochs - 2``.
 
     ``dirty[t]`` gates ready tasks at epoch ``t`` (all-False == greedy);
@@ -294,6 +360,12 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
     ROADMAP's min-energy dispatch; both keys are exact in float32 for the
     menu's quarter-kW powers, so numpy/JAX parity survives the dtype gap).
 
+    ``state0`` (default: :func:`init_dispatch_state`, an idle fleet) seeds
+    the simulation — pass a state with non-zero ``mfree`` to dispatch onto a
+    *warm* fleet whose machines are already busy until given epochs.  The
+    shared-fleet streaming admission solves its greedy stretch baseline this
+    way, so deadlines reflect real contention rather than an empty fleet.
+
     The loop body is :func:`dispatch_epoch`; streaming callers apply it one
     epoch at a time over a lane pool instead.
     """
@@ -301,6 +373,8 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
         raise ValueError(f"unknown machine_rule {machine_rule!r}")
     cp = downstream_critical_path(inst)
     preds = inst.pred & inst.task_mask[None, :]
+    if state0 is None:
+        state0 = init_dispatch_state(inst.T, inst.M)
 
     # Epochs past the last placement are no-ops in the oracle, so a
     # while_loop that exits once every real task is scheduled (vmap masks
@@ -316,8 +390,7 @@ def simulate_online(inst: PackedInstance, dirty: jnp.ndarray,
                                      machine_rule=machine_rule, cp=cp,
                                      preds=preds)
 
-    _, state = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), init_dispatch_state(inst.T, inst.M)))
+    _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state0))
     return state.schedule()
 
 
@@ -333,7 +406,8 @@ def online_carbon_gated_jax(inst: PackedInstance, intensity,
                             stretch: float = 1.5,
                             machine_rule: str = "earliest_finish",
                             soft: bool = False, temp: float = 0.05,
-                            use_kernels: bool | None = None):
+                            use_kernels: bool | None = None,
+                            state0: DispatchState | None = None):
     """Single-instance gated dispatch (mirrors ``online_carbon_gated``).
 
     Runs the greedy baseline first to set ``budget = int(stretch * makespan)``
@@ -349,22 +423,31 @@ def online_carbon_gated_jax(inst: PackedInstance, intensity,
 
     ``use_kernels`` forwards to :func:`dirty_mask` (Pallas gate threshold;
     bit-exact equal mask, identical schedule).
+
+    ``state0`` dispatches onto a warm fleet (see :func:`simulate_online`):
+    both the greedy baseline and the gated run start from it, so the stretch
+    budget is relative to what an uncontended greedy could do *on that
+    fleet* — the shared-fleet admission view.  Not supported with ``soft``.
     """
     intensity = jnp.asarray(intensity)
     n_epochs = int(intensity.shape[0])
     if soft:
+        if state0 is not None:
+            raise ValueError("state0 is not supported on the soft path")
         from repro.learn.relax import soft_dispatch   # local: avoids cycle
         return soft_dispatch(inst, intensity, jnp.float32(theta),
                              jnp.int32(window), jnp.float32(stretch),
                              max_window=int(window), temp=temp,
                              machine_rule=machine_rule)
-    g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+    g = simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
+                        n_epochs=n_epochs, machine_rule=machine_rule,
+                        state0=state0)
     ms0 = makespan(inst, g.start, g.assign)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
     dirty = dirty_mask(intensity, jnp.float32(theta), jnp.int32(window),
                        max_window=int(window), use_kernels=use_kernels)
     return simulate_online(inst, dirty, budget, n_epochs=n_epochs,
-                           machine_rule=machine_rule)
+                           machine_rule=machine_rule, state0=state0)
 
 
 def policy_grid(thetas: Sequence[float], windows: Sequence[int],

@@ -179,22 +179,31 @@ def online_rolling_gated_jax(inst: PackedInstance, truth, key: jax.Array,
                              theta: float = 0.5, window: int = 96,
                              stretch: float = 1.5, every: int = 48,
                              scale: float = 1.0, model: str = "oracle_ar1",
-                             machine_rule: str = "earliest_finish"
-                             ) -> OnlineSchedule:
+                             machine_rule: str = "earliest_finish",
+                             state0=None) -> OnlineSchedule:
     """Gated online dispatch with rolling re-quantile thresholds.
 
     Mirrors :func:`~repro.core.solvers.online_jax.online_carbon_gated_jax`
     (greedy run fixes the stretch budget, then the gated simulation), with
     the day-ahead dirty mask swapped for the rolling one.  ``scale = 0``
     reproduces the day-ahead dispatcher bit-exactly for every ``every``.
+    ``state0`` warm-starts BOTH runs from an existing
+    :class:`~repro.core.solvers.online_jax.DispatchState` (shared-fleet
+    contention: the greedy budget baseline must face the same busy machines
+    the gated run does), matching the day-ahead mirror's semantics.
     """
     truth = jnp.asarray(truth, jnp.float32)
     n_epochs = int(truth.shape[0])
-    g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+    if state0 is None:
+        g = online_greedy_jax(inst, n_epochs, machine_rule=machine_rule)
+    else:
+        g = simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
+                            n_epochs=n_epochs, machine_rule=machine_rule,
+                            state0=state0)
     ms0 = makespan(inst, g.start, g.assign)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(jnp.int32)
     dirty = rolling_dirty_mask(truth, jnp.float32(theta), jnp.int32(window),
                                key, jnp.float32(scale), every=every,
                                max_window=int(window), model=model)
     return simulate_online(inst, dirty, budget, n_epochs=n_epochs,
-                           machine_rule=machine_rule)
+                           machine_rule=machine_rule, state0=state0)

@@ -21,9 +21,10 @@ class LanePool:
     """Host-side occupancy of a fixed pool of slot lanes.
 
     Payloads are arbitrary (a serve ``Request``, a stream job record).
-    ``admit`` fills free lanes from the head of a FIFO queue; ``evict``
-    frees one lane; ``drain`` empties the pool (the end-of-run reset that
-    makes engines re-entrant — see the ``ServeEngine.run`` re-entry fix).
+    ``admit`` fills free lanes from a FIFO queue (or, via its ``select``
+    policy hook, from the ready prefix in policy order); ``evict`` frees one
+    lane; ``drain`` empties the pool (the end-of-run reset that makes
+    engines re-entrant — see the ``ServeEngine.run`` re-entry fix).
     """
 
     def __init__(self, n_lanes: int):
@@ -70,21 +71,53 @@ class LanePool:
         self._slots[lane] = None
         return payload
 
-    def admit(self, queue: list, ready: Callable[[Any], bool] | None = None
+    def admit(self, queue, ready: Callable[[Any], bool] | None = None,
+              select: Callable[[list], int] | None = None
               ) -> list[tuple[int, Any]]:
-        """Fill free lanes FIFO from ``queue`` (popped in place).
+        """Fill free lanes from ``queue`` (removed in place).
 
-        ``ready`` (optional) guards the queue head — admission stops at the
-        first item it rejects (a stream job that hasn't *arrived* yet must
-        not jump the FIFO order).  Returns the ``(lane, payload)``
-        placements so the engine can run its per-admission device work
-        (prefill, greedy/budget solve) for exactly the new payloads.
+        ``queue`` is any mutable sequence; a ``collections.deque`` makes the
+        default FIFO pop O(1) — with a plain list every admission shifts the
+        whole backlog (the O(n^2)-under-load behavior the stream engine's
+        deque fixed; a list still works, for callers that don't care).
+
+        ``ready`` (optional) guards eligibility — with ``queue`` sorted by
+        readiness (arrival order), the eligible items are exactly the prefix
+        passing ``ready``, and admission stops when the head fails it (a
+        stream job that hasn't *arrived* yet must not jump the FIFO order).
+
+        ``select`` (optional) is the admission-policy hook: given the list
+        of currently-eligible payloads (the ready prefix, queue order), it
+        returns the index of the one to admit next.  ``None`` is FIFO
+        (always index 0).  Policies only reorder *within* the ready set, so
+        the not-yet-ready tail can never be jumped into a lane.
+
+        Returns the ``(lane, payload)`` placements so the engine can run its
+        per-admission device work (prefill, greedy/budget solve) for exactly
+        the new payloads.
         """
         placed: list[tuple[int, Any]] = []
         for lane in self.free_lanes():
             if not queue or (ready is not None and not ready(queue[0])):
                 break
-            item = queue.pop(0)
+            if select is None:
+                item = (queue.popleft() if hasattr(queue, "popleft")
+                        else queue.pop(0))
+            else:
+                n_ready = len(queue)
+                if ready is not None:
+                    n_ready = 0
+                    for x in queue:
+                        if not ready(x):
+                            break
+                        n_ready += 1
+                i = int(select([queue[k] for k in range(n_ready)]))
+                if not 0 <= i < n_ready:
+                    raise ValueError(
+                        f"admission policy chose index {i} outside the "
+                        f"ready prefix of length {n_ready}")
+                item = queue[i]
+                del queue[i]
             self._slots[lane] = item
             placed.append((lane, item))
         return placed

@@ -11,7 +11,8 @@ shape reused for scheduling instead of decoding:
   :func:`repro.scenarios.batching.padding_rows`-style inert padding, so the
   pool arrays never change shape);
 * **one jitted gate-and-dispatch step over the whole pool per tick** —
-  :func:`repro.core.solvers.online_jax.dispatch_epoch` vmapped over lanes,
+  :func:`repro.core.solvers.online_jax.dispatch_epoch_shared` vmapped over
+  lanes (partitioned) or scanned over them in priority order (shared),
   gated by the carbon quantile threshold (day-ahead
   :func:`~repro.core.solvers.online_jax.dirty_mask`, or forecast-banded via
   :func:`repro.forecast.rolling.rolling_dirty_mask` when
@@ -19,35 +20,52 @@ shape reused for scheduling instead of decoding:
 * admission runs a second jitted program per job (the scheduling analogue
   of serve's prefill): a greedy solve fixes the job's stretch budget and
   its carbon/energy baseline;
-* completed jobs are evicted and their lanes refilled FIFO from the queue
+* completed jobs are evicted and their lanes refilled from the queue
   (:class:`repro.serve.lanes.LanePool` — the bookkeeping shared with the
-  serve engine).
+  serve engine) — FIFO by default, or shortest-critical-path-first under
+  backlog via the admission-policy hook (``admission="scpf"``).
 
-Each lane is an independent fleet partition (the lanes' machines are
-disjoint), so carbon gating couples jobs only through *lane occupancy*:
-delaying a job keeps its lane busy longer and later arrivals queue — the
-PCAPS-style carbon/latency tension the stream benchmark measures.
+Two fleet modes:
+
+* ``shared_fleet=False`` (default) — each lane is an independent fleet
+  partition (the lanes' machines are disjoint), so carbon gating couples
+  jobs only through *lane occupancy*: delaying a job keeps its lane busy
+  longer and later arrivals queue — the PCAPS-style carbon/latency tension
+  the stream benchmark measures.
+* ``shared_fleet=True`` — every lane contends for ONE pool-global machine
+  set (the paper's common-fleet model): machine free-times are pool state
+  threaded through a ``lax.scan`` over lanes in deterministic priority
+  order (earliest admission first, rid tie-break), so one lane's placements
+  consume machine free-time that later lanes see *within the same epoch*.
+  Admission's greedy budget solve also starts from the live shared
+  free-times, so stretch deadlines reflect real contention.
 
 Contracts (property- and golden-tested in ``tests/test_stream.py`` /
 ``tests/test_stream_golden.py``):
 
 * **closed-batch bit-exactness** — with every arrival at t=0 and enough
-  lanes, each job's dispatch decisions (start/assign/scheduled and the
-  stretch budget) are bit-exact against the batched
+  lanes, each partitioned-mode job's dispatch decisions (start/assign/
+  scheduled and the stretch budget) are bit-exact against the batched
   :func:`~repro.core.solvers.online_jax.online_carbon_gated_jax` path on
   the same instance, across scenario families x fleets (the engine's tick
   *is* that simulator's loop body);
 * **determinism** — the whole run is a pure function of the seed: same
-  seed, same event log, replay-locked by a tiny golden;
+  seed, same event log, replay-locked by a tiny golden per fleet mode; the
+  shared-fleet step depends only on the lane *priority order*, never on
+  which physical lane a job landed in;
 * every evicted schedule passes the shared validator
-  (:mod:`repro.core.validate`).
+  (:mod:`repro.core.validate`), and shared-fleet evictions additionally
+  verify no cross-lane machine overlap against every schedule already
+  evicted this run.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
-from typing import NamedTuple, Sequence
+import types
+from typing import Mapping, NamedTuple, Sequence
 
 import numpy as np
 
@@ -58,11 +76,11 @@ from repro.core import validate
 from repro.core.carbon import CarbonTrace, sample_window, synthesize
 from repro.core.carbon import EPOCHS_PER_DAY
 from repro.core.instance import Instance, Job, PackedInstance, pack
-from repro.core.objectives import evaluate
-from repro.core.solvers.online_jax import (DispatchState, dirty_mask,
-                                           dispatch_epoch,
+from repro.core.solvers.online_jax import (LaneState, dirty_mask,
+                                           dispatch_epoch_shared,
                                            downstream_critical_path,
-                                           simulate_online)
+                                           init_lane_state, simulate_online)
+from repro.core.objectives import evaluate
 from repro.forecast.rolling import rolling_dirty_mask
 from repro.obs import MetricsRegistry, Tracer, get_tracer
 from repro.scenarios.batching import padding_rows
@@ -95,6 +113,8 @@ class StreamConfig:
     forecast_every: int | None = None   # None: exact day-ahead gate
     forecast_scale: float = 1.0
     forecast_model: str = "oracle_ar1"
+    shared_fleet: bool = False     # lanes contend for one machine set
+    admission: str = "fifo"        # lane-refill policy (ADMISSION_POLICIES)
 
     def validate(self) -> "StreamConfig":
         from repro.stream.arrivals import ARRIVAL_NAMES
@@ -102,6 +122,8 @@ class StreamConfig:
             raise ValueError(f"unknown arrival family {self.arrivals!r}")
         if self.n_lanes < 1:
             raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {self.admission!r}")
         return self
 
 
@@ -121,6 +143,7 @@ class StreamJob:
     carbon: float = 0.0
     energy: float = 0.0
     finished: bool = False
+    truncated: bool = False         # fully placed, completes past the stream
     start: np.ndarray | None = None
     assign: np.ndarray | None = None
 
@@ -144,12 +167,24 @@ class StreamJob:
 # An un-observed histogram's snapshot (summary() placeholder).
 _EMPTY_DIST = {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0, "max": 0.0}
 
+# Admission-policy registry: payload-list -> index of the next admit.
+# "fifo" is queue order; "scpf" admits the shortest-critical-path job among
+# those already arrived (backlog triage: under contention, short jobs clear
+# lanes faster) — both deterministic, rid tie-break.
+ADMISSION_POLICIES = ("fifo", "scpf")
+
 
 class StreamResult(NamedTuple):
     jobs: list[StreamJob]          # every stream job, rid order
     events: list[dict]             # serializable event log (golden-locked)
     meta: dict
-    summary: dict = {}             # StreamEngine.summary() of the run
+    # StreamEngine.summary() of the run.  The default is an IMMUTABLE empty
+    # mapping: a `summary: dict = {}` default here would be one dict object
+    # shared by every StreamResult constructed without a summary, so any
+    # in-place mutation of one run's summary would leak into all others
+    # (regression-locked in tests/test_stream.py).  Real constructions pass
+    # a fresh dict per result (see simulate_stream).
+    summary: Mapping = types.MappingProxyType({})
 
 
 # ---------------------------------------------------------------------------
@@ -159,18 +194,25 @@ class StreamResult(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("n_epochs", "machine_rule"))
 def _admission_eval(inst: PackedInstance, cum: jnp.ndarray,
                     stretch: jnp.ndarray, admitted: jnp.ndarray,
-                    n_epochs: int, machine_rule: str):
+                    mfree0: jnp.ndarray, n_epochs: int, machine_rule: str):
     """Per-job admission solve (the scheduling analogue of serve prefill).
 
-    Greedy-dispatches the job alone on its lane partition to fix the
-    absolute stretch deadline ``admitted + int(stretch * greedy_relative)``
-    and the greedy carbon/energy baseline the savings metric is measured
-    against.  At ``admitted = 0`` the budget arithmetic is bit-identical to
+    Greedy-dispatches the job alone to fix the absolute stretch deadline
+    ``admitted + int(stretch * greedy_relative)`` and the greedy
+    carbon/energy baseline the savings metric is measured against.
+    ``mfree0`` is the fleet the greedy starts on: all-zeros for a
+    partitioned lane (its machines are idle by construction at insert), the
+    *live shared free-times* for a shared fleet — so a shared-fleet job's
+    deadline and baseline reflect the contention it is actually admitted
+    into.  At ``admitted = 0`` on an idle fleet the budget arithmetic is
+    bit-identical to
     :func:`~repro.core.solvers.online_jax.online_carbon_gated_jax`'s
     (same float32 cast chain) — part of the closed-batch parity contract.
     """
+    state0 = init_lane_state(inst.T).merge(mfree0)
     g = simulate_online(inst, jnp.zeros((n_epochs,), bool), jnp.int32(0),
-                        n_epochs=n_epochs, machine_rule=machine_rule)
+                        n_epochs=n_epochs, machine_rule=machine_rule,
+                        state0=state0)
     obj = evaluate(inst, g.start, g.assign, cum)
     rel = (obj.makespan - admitted).astype(jnp.float32)
     budget = admitted + (jnp.float32(stretch) * rel).astype(jnp.int32)
@@ -179,41 +221,91 @@ def _admission_eval(inst: PackedInstance, cum: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("machine_rule",))
-def _pool_tick(pool: PackedInstance, cp: jnp.ndarray, state: DispatchState,
-               dirty: jnp.ndarray, budget: jnp.ndarray, t: jnp.ndarray,
-               machine_rule: str):
-    """ONE gate-and-dispatch step over the whole lane pool — epoch ``t``.
+def _pool_tick(pool: PackedInstance, cp: jnp.ndarray, lstate: LaneState,
+               mfree: jnp.ndarray, dirty: jnp.ndarray, budget: jnp.ndarray,
+               t: jnp.ndarray, machine_rule: str):
+    """ONE gate-and-dispatch step over the whole lane pool — epoch ``t``,
+    partitioned fleets.
 
-    :func:`dispatch_epoch` vmapped over lanes; all lanes share the global
-    gate bit ``dirty[t]`` and clock ``t``, each lane has its own instance,
-    critical path and budget.  Returns the new pool state plus per-lane
-    "all tasks placed" flags and completion epochs (the eviction signal).
+    :func:`dispatch_epoch_shared` vmapped over lanes, each with its own
+    machine row ``mfree[lane]`` (disjoint partitions: lanes cannot interact
+    through machines).  All lanes share the global gate bit ``dirty[t]`` and
+    clock ``t``.  Returns the new pool state plus per-lane "all tasks
+    placed" flags and completion epochs (the eviction signal).
     """
     dirty_t = dirty[t]
-    state = jax.vmap(
-        lambda i, c, s, b: dispatch_epoch(i, s, dirty_t, b, t,
-                                          machine_rule=machine_rule, cp=c)
-    )(pool, cp, state, budget)
-    done = jnp.all(state.scheduled | ~pool.task_mask, axis=1)
-    comp = jnp.max(jnp.where(pool.task_mask, state.comp, 0), axis=1)
-    return state, done, comp
+    lstate, mfree = jax.vmap(
+        lambda i, c, s, mf, b: dispatch_epoch_shared(
+            i, s, mf, dirty_t, b, t, machine_rule=machine_rule, cp=c)
+    )(pool, cp, lstate, mfree, budget)
+    done = jnp.all(lstate.scheduled | ~pool.task_mask, axis=1)
+    comp = jnp.max(jnp.where(pool.task_mask, lstate.comp, 0), axis=1)
+    return lstate, mfree, done, comp
+
+
+@functools.partial(jax.jit, static_argnames=("machine_rule",))
+def _pool_tick_shared(pool: PackedInstance, cp: jnp.ndarray,
+                      lstate: LaneState, mfree: jnp.ndarray,
+                      dirty: jnp.ndarray, budget: jnp.ndarray,
+                      t: jnp.ndarray, order: jnp.ndarray, machine_rule: str):
+    """ONE gate-and-dispatch step over the lane pool — epoch ``t``, SHARED
+    fleet.
+
+    A ``lax.scan`` over lanes in ``order`` (the deterministic priority
+    permutation: occupied lanes by (admission epoch, rid), free lanes last)
+    threading the single pool-global ``mfree [M]`` through every lane's
+    :func:`dispatch_epoch_shared` — so a higher-priority lane's placements
+    consume machine free-time that lower-priority lanes see *within this
+    same epoch*.  Free (padding) lanes have no real tasks, place nothing,
+    and leave ``mfree`` untouched, so scanning them is inert.  The result
+    depends on ``order`` only through which *jobs* it ranks — not on which
+    physical lane a job occupies (tested as lane-order determinism).
+    """
+    dirty_t = dirty[t]
+
+    def body(mf, lane):
+        inst = jax.tree.map(lambda x: x[lane], pool)
+        st = jax.tree.map(lambda x: x[lane], lstate)
+        st, mf = dispatch_epoch_shared(inst, st, mf, dirty_t, budget[lane],
+                                       t, machine_rule=machine_rule,
+                                       cp=cp[lane])
+        return mf, st
+
+    mfree, stacked = jax.lax.scan(body, mfree, order)
+    # Scatter the scan-ordered rows back to lane order (order is a
+    # permutation of 0..L-1).
+    lstate = jax.tree.map(lambda x, s: x.at[order].set(s), lstate, stacked)
+    done = jnp.all(lstate.scheduled | ~pool.task_mask, axis=1)
+    comp = jnp.max(jnp.where(pool.task_mask, lstate.comp, 0), axis=1)
+    return lstate, mfree, done, comp
 
 
 @jax.jit
-def _insert_lane(pool: PackedInstance, cp: jnp.ndarray, state: DispatchState,
+def _insert_lane(pool: PackedInstance, cp: jnp.ndarray, lstate: LaneState,
                  budget: jnp.ndarray, lane: jnp.ndarray,
                  inst: PackedInstance, job_cp: jnp.ndarray,
                  job_budget: jnp.ndarray):
     """Insert one admitted job into ``lane`` (serve's cache insert, for
     dispatch state): overwrite the lane's instance/cp/budget rows and zero
-    its progress state."""
+    its task-side progress.  Machine free-times are NOT touched here — a
+    partitioned lane's row is cleared separately (:func:`_clear_lane_mfree`),
+    while a shared fleet's global ``mfree`` must survive inserts unchanged
+    (the machines stay busy regardless of which job a lane holds)."""
     pool = PackedInstance(*(getattr(pool, f).at[lane].set(getattr(inst, f))
                             for f in PackedInstance._fields))
-    state = DispatchState(*(getattr(state, f).at[lane].set(
-        jnp.zeros_like(getattr(state, f)[lane]))
-        for f in DispatchState._fields))
-    return pool, cp.at[lane].set(job_cp), state, budget.at[lane].set(
+    lstate = LaneState(*(getattr(lstate, f).at[lane].set(
+        jnp.zeros_like(getattr(lstate, f)[lane]))
+        for f in LaneState._fields))
+    return pool, cp.at[lane].set(job_cp), lstate, budget.at[lane].set(
         job_budget)
+
+
+@jax.jit
+def _clear_lane_mfree(mfree: jnp.ndarray, lane: jnp.ndarray) -> jnp.ndarray:
+    """Reset one partitioned lane's machine row to idle (the previous
+    occupant completed at or before the insert epoch, so its residual
+    free-times are stale by construction)."""
+    return mfree.at[lane].set(jnp.zeros_like(mfree[lane]))
 
 
 @jax.jit
@@ -245,10 +337,13 @@ class StreamEngine:
                  forecast_scale: float = 1.0,
                  forecast_model: str = "oracle_ar1", seed: int = 0,
                  validate_evictions: bool = True,
+                 shared_fleet: bool = False, admission: str = "fifo",
                  tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None):
         if machine_rule not in ("earliest_finish", "min_energy"):
             raise ValueError(f"unknown machine_rule {machine_rule!r}")
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {admission!r}")
         # Telemetry is host-side only (bit-exact contract: repro.obs).  The
         # ambient tracer resolves to a no-op unless REPRO_TRACE=1 or a
         # global tracer is installed; metrics are always on (cheap Python
@@ -265,6 +360,9 @@ class StreamEngine:
         self.stretch = float(stretch)
         self.machine_rule = machine_rule
         self.validate_evictions = bool(validate_evictions)
+        self.shared_fleet = bool(shared_fleet)
+        self.admission = admission
+        self._cp_cache: dict[int, int] = {}   # rid -> critical path (scpf)
         intensity = jnp.asarray(trace.intensity)
         self.cum = jnp.asarray(trace.cumulative())
         if forecast_every is None:
@@ -290,14 +388,21 @@ class StreamEngine:
     def _reset_pool_state(self) -> None:
         L, T, M = self.pool.n_lanes, self.T, self.M
         self.pool_inst = padding_rows(L, T, M)      # inert free lanes
-        self.state = DispatchState(
+        self.lstate = LaneState(
             jnp.zeros((L, T), bool), jnp.zeros((L, T), jnp.int32),
-            jnp.zeros((L, M), jnp.int32), jnp.zeros((L, T), jnp.int32),
-            jnp.zeros((L, T), jnp.int32))
+            jnp.zeros((L, T), jnp.int32), jnp.zeros((L, T), jnp.int32))
+        # Machine free-times: pool-global [M] when the fleet is shared,
+        # one disjoint partition row per lane [L, M] otherwise.
+        self.mfree = jnp.zeros((M,) if self.shared_fleet else (L, M),
+                               jnp.int32)
         self.cp = jnp.zeros((L, T), jnp.int32)
         self.budget = jnp.zeros((L,), jnp.int32)
         self._done = np.zeros(L, bool)
         self._comp = np.zeros(L, np.int64)
+        # Shared-fleet eviction validation: per-machine (start, end, rid)
+        # intervals of every schedule evicted this run.
+        self._fleet_busy: list[list[tuple[int, int, int]]] = \
+            [[] for _ in range(M)]
 
     # -- admission / eviction -------------------------------------------------
 
@@ -305,9 +410,16 @@ class StreamEngine:
         job = dataclasses.replace(sj.job, arrival=t)   # can't start pre-lane
         inst = pack(Instance(jobs=(job,), powers_kw=self.powers,
                              speeds=self.speeds), pad_tasks=self.T)
+        # The greedy budget solve's starting fleet: idle for a partitioned
+        # lane (its machines are free at insert by construction), the LIVE
+        # shared free-times otherwise — a shared-fleet job's stretch
+        # deadline and savings baseline are measured against what greedy
+        # could do on the fleet it actually contends for.
+        mfree0 = (self.mfree if self.shared_fleet
+                  else jnp.zeros((self.M,), jnp.int32))
         t0 = time.perf_counter()
         cp, budget, obj, complete = _admission_eval(
-            inst, self.cum, jnp.float32(self.stretch), jnp.int32(t),
+            inst, self.cum, jnp.float32(self.stretch), jnp.int32(t), mfree0,
             n_epochs=self.E, machine_rule=self.machine_rule)
         complete = bool(complete)      # host sync: the admission solve ran
         self._observe_wall("admission_wall_s", time.perf_counter() - t0)
@@ -318,9 +430,11 @@ class StreamEngine:
             self.tracer.instant("reject", t, rid=sj.rid,
                                 arrival=int(sj.arrival))
             return False
-        self.pool_inst, self.cp, self.state, self.budget = _insert_lane(
-            self.pool_inst, self.cp, self.state, self.budget,
+        self.pool_inst, self.cp, self.lstate, self.budget = _insert_lane(
+            self.pool_inst, self.cp, self.lstate, self.budget,
             jnp.int32(lane), inst, cp, budget)
+        if not self.shared_fleet:
+            self.mfree = _clear_lane_mfree(self.mfree, jnp.int32(lane))
         sj.inst = inst
         sj.admitted = t
         sj.budget = int(budget)
@@ -335,21 +449,28 @@ class StreamEngine:
             carbon_gpkwh=round(float(self._intensity_host[t]), 3))
         return True
 
-    def _finish(self, lane: int, sj: StreamJob) -> None:
+    def _finish(self, lane: int, sj: StreamJob,
+                truncated: bool = False) -> None:
         self.pool.evict(lane)
-        row = jax.tree.map(lambda x: x[lane], self.state)
+        row = jax.tree.map(lambda x: x[lane], self.lstate)
         obj, viol = _eval_schedule(sj.inst, row.start, row.assign, self.cum)
         if self.validate_evictions and int(viol) != 0:
             raise AssertionError(
                 f"evicted job rid={sj.rid} has an infeasible schedule "
                 f"(violation mass {int(viol)})")
+        if self.shared_fleet and self.validate_evictions:
+            self._check_fleet_overlap(sj, np.asarray(row.start),
+                                      np.asarray(row.assign))
         sj.completed = int(self._comp[lane])
         sj.carbon = float(obj.carbon)
         sj.energy = float(obj.energy)
         sj.start = np.asarray(row.start)
         sj.assign = np.asarray(row.assign)
         sj.finished = True
+        sj.truncated = bool(truncated)
         self.metrics.counter("jobs_completed").inc()
+        if truncated:
+            self.metrics.counter("jobs_truncated").inc()
         self.metrics.histogram("carbon_savings_pct").observe(
             100.0 * sj.carbon_savings)
         if self.tracer.enabled:
@@ -358,7 +479,66 @@ class StreamEngine:
                              carbon_g=round(sj.carbon, 3),
                              greedy_carbon_g=round(sj.greedy_carbon, 3),
                              savings_pct=round(100 * sj.carbon_savings, 2))
-            self.tracer.instant("evict", sj.completed, rid=sj.rid, lane=lane)
+            self.tracer.instant("evict", sj.completed, rid=sj.rid, lane=lane,
+                                truncated=sj.truncated)
+
+    def _check_fleet_overlap(self, sj: StreamJob, start: np.ndarray,
+                             assign: np.ndarray) -> None:
+        """Shared-fleet eviction invariant: no task of this schedule may
+        overlap, on its machine, any task of a schedule already evicted this
+        run.  Per-lane validation can't see this (each lane's validator only
+        knows its own job); the threaded ``mfree`` makes it hold by
+        construction, and this check keeps it honest."""
+        dur = np.asarray(sj.inst.dur)
+        for ti in np.nonzero(np.asarray(sj.inst.task_mask))[0]:
+            m = int(assign[ti])
+            s = int(start[ti])
+            e = s + int(dur[ti, m])
+            for (bs, be, brid) in self._fleet_busy[m]:
+                if s < be and bs < e:
+                    raise AssertionError(
+                        f"shared-fleet overlap: rid={sj.rid} task {ti} "
+                        f"[{s}, {e}) collides with rid={brid} "
+                        f"[{bs}, {be}) on machine {m}")
+            self._fleet_busy[m].append((s, e, sj.rid))
+
+    # -- admission policy / lane priority -------------------------------------
+
+    def _job_critical_path(self, sj: StreamJob) -> int:
+        """Base-duration critical path of a job's DAG (machine-independent —
+        the scpf admission key; cached per rid)."""
+        got = self._cp_cache.get(sj.rid)
+        if got is not None:
+            return got
+        job = sj.job
+        cp = list(job.base_durations)
+        succ: list[list[int]] = [[] for _ in range(job.n_tasks)]
+        for u, v in job.edges:
+            succ[u].append(v)
+        for u in range(job.n_tasks - 1, -1, -1):
+            if succ[u]:
+                cp[u] = job.base_durations[u] + max(cp[v] for v in succ[u])
+        val = max(cp, default=0)
+        self._cp_cache[sj.rid] = val
+        return val
+
+    def _admission_select(self):
+        """The LanePool ``select`` hook for the configured policy (None ==
+        FIFO, the O(1) deque pop)."""
+        if self.admission == "fifo":
+            return None
+        return lambda ready: min(
+            range(len(ready)),
+            key=lambda i: (self._job_critical_path(ready[i]), ready[i].rid))
+
+    def _lane_order(self) -> jnp.ndarray:
+        """Deterministic shared-fleet priority permutation for this tick:
+        occupied lanes by (admission epoch, rid) — earliest-admitted job wins
+        machine contention — then free lanes (inert in the scan)."""
+        occ = sorted((sj.admitted, sj.rid, lane)
+                     for lane, sj in self.pool.active())
+        order = [lane for _, _, lane in occ] + self.pool.free_lanes()
+        return jnp.asarray(order, jnp.int32)
 
     # -- telemetry ------------------------------------------------------------
 
@@ -400,6 +580,7 @@ class StreamEngine:
             "jobs_admitted": snap.get("jobs_admitted", 0),
             "jobs_rejected": snap.get("jobs_rejected", 0),
             "jobs_completed": snap.get("jobs_completed", 0),
+            "jobs_truncated": snap.get("jobs_truncated", 0),
             "queue_delay_epochs": snap.get(
                 "queue_delay_epochs", dict(_EMPTY_DIST)),
             "carbon_savings_pct": snap.get(
@@ -430,18 +611,25 @@ class StreamEngine:
         self.metrics.reset()
         self._wall_seen: set[str] = set()
         sjobs = [StreamJob(rid=i, job=j) for i, j in enumerate(jobs)]
-        queue = sorted(sjobs, key=lambda s: (s.job.arrival, s.rid))
+        # deque: the FIFO head pop in LanePool.admit is O(1) — with a plain
+        # list every admission under backlog shifted the whole queue (the
+        # O(n^2) fix, regression-locked in tests/test_serve.py).
+        queue = collections.deque(
+            sorted(sjobs, key=lambda s: (s.job.arrival, s.rid)))
+        select = self._admission_select()
         t = 0
         while t < self.E - 1:
             # 1. evict lanes whose job finished executing by epoch t
             for lane, sj in list(self.pool.active()):
                 if self._done[lane] and self._comp[lane] <= t:
                     self._finish(lane, sj)
-            # 2. admit arrived jobs FIFO into the freed lanes; jobs too close
-            #    to the trace end to finish even greedily are rejected (they
+            # 2. admit arrived jobs into the freed lanes (FIFO, or the
+            #    configured policy over the ready prefix); jobs too close to
+            #    the trace end to finish even greedily are rejected (they
             #    surface finished=False rather than wedging a lane)
             for lane, sj in self.pool.admit(
-                    queue, ready=lambda s: s.job.arrival <= t):
+                    queue, ready=lambda s: s.job.arrival <= t,
+                    select=select):
                 if not self._admit_job(lane, sj, t):
                     self.pool.evict(lane)
                     sj.admitted = -1
@@ -455,19 +643,32 @@ class StreamEngine:
             if self.tracer.enabled:
                 self._trace_tick(t, queue)
             t0 = time.perf_counter()
-            self.state, done, comp = _pool_tick(
-                self.pool_inst, self.cp, self.state, self.dirty,
-                self.budget, jnp.int32(t), machine_rule=self.machine_rule)
+            if self.shared_fleet:
+                self.lstate, self.mfree, done, comp = _pool_tick_shared(
+                    self.pool_inst, self.cp, self.lstate, self.mfree,
+                    self.dirty, self.budget, jnp.int32(t),
+                    self._lane_order(), machine_rule=self.machine_rule)
+            else:
+                self.lstate, self.mfree, done, comp = _pool_tick(
+                    self.pool_inst, self.cp, self.lstate, self.mfree,
+                    self.dirty, self.budget, jnp.int32(t),
+                    machine_rule=self.machine_rule)
             self._done, self._comp = np.asarray(done), np.asarray(comp)
             self._observe_wall("tick_wall_s", time.perf_counter() - t0)
             self.metrics.counter("ticks").inc()
             if self._dirty_host[t]:
                 self.metrics.counter("gate_closed_epochs").inc()
             t += 1
-        # jobs that finished on the final tick
+        # End-of-stream surfacing: any lane whose job is fully placed gets
+        # its stats, including those whose completion epoch lands PAST the
+        # final tick — those evict with truncated=True (the silent-drop fix:
+        # a feasible, fully-dispatched schedule used to surface as
+        # finished=False with no carbon/savings stats just because the trace
+        # ended before its last task ran out).
         for lane, sj in list(self.pool.active()):
-            if self._done[lane] and self._comp[lane] <= t:
-                self._finish(lane, sj)
+            if self._done[lane]:
+                self._finish(lane, sj,
+                             truncated=bool(self._comp[lane] > t))
         self.metrics.gauge("final_lane_occupancy").set(
             sum(1 for _ in self.pool.active()))
         # drain: unfinished jobs surface flagged; the pool resets so the
@@ -519,6 +720,10 @@ def event_log(jobs: Sequence[StreamJob]) -> list[dict]:
                 "energy_kwh": round(float(sj.energy), 4),
                 "carbon_savings_pct": round(100 * sj.carbon_savings, 3),
             })
+        if sj.truncated:
+            # Conditional so pre-existing goldens (all jobs complete within
+            # the stream) stay byte-identical.
+            ev["truncated"] = True
         out.append(ev)
     return out
 
@@ -555,7 +760,8 @@ def simulate_stream(cfg: StreamConfig,
                        forecast_every=cfg.forecast_every,
                        forecast_scale=cfg.forecast_scale,
                        forecast_model=cfg.forecast_model, seed=cfg.seed,
-                       tracer=tracer)
+                       shared_fleet=cfg.shared_fleet,
+                       admission=cfg.admission, tracer=tracer)
     sjobs = eng.run(jobs)
     meta = {
         "config": {k: (v if v is None or isinstance(v, (int, float, str,

@@ -143,3 +143,42 @@ def test_lane_pool_contracts():
     assert not pool.any_active() and pool.free_lanes() == [0, 1]
     with pytest.raises(ValueError):
         LanePool(0)
+
+
+def test_lane_pool_admit_accepts_deque():
+    """Regression for the O(n^2) backlog pop: ``admit`` used ``pop(0)``,
+    which shifts the whole list per admission AND raises TypeError on a
+    ``collections.deque`` (whose ``pop`` takes no index) — the stream
+    engine's queue is a deque now, so this locks the O(1) popleft path
+    with the FIFO/ready contract intact."""
+    import collections
+    pool = LanePool(2)
+    queue = collections.deque(["a", "b", "c"])
+    assert pool.admit(queue) == [(0, "a"), (1, "b")]
+    assert list(queue) == ["c"]
+    assert pool.evict(0) == "a"
+    # ready-gating unchanged on a deque
+    assert pool.admit(queue, ready=lambda _: False) == []
+    assert list(queue) == ["c"]
+    assert pool.admit(queue, ready=lambda _: True) == [(0, "c")]
+    assert not queue
+
+
+def test_lane_pool_admission_policy_hook():
+    """``select`` reorders admissions within the READY prefix only, and an
+    out-of-prefix pick is rejected loudly."""
+    pool = LanePool(2)
+    import collections
+    queue = collections.deque([("x", 9), ("y", 1), ("z", 0)])
+    # ready: first two only; select: smallest weight among ready
+    placed = pool.admit(queue, ready=lambda p: p[0] in ("x", "y"),
+                        select=lambda ready: min(
+                            range(len(ready)), key=lambda i: ready[i][1]))
+    assert placed == [(0, ("y", 1)), (1, ("x", 9))], \
+        "policy picks within the ready prefix; ('z', 0) must not jump"
+    assert list(queue) == [("z", 0)]
+    pool.drain()
+    bad = LanePool(1)
+    with pytest.raises(ValueError, match="outside the ready prefix"):
+        bad.admit(collections.deque([1, 2]), ready=lambda p: p == 1,
+                  select=lambda ready: 1)

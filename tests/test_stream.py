@@ -221,6 +221,53 @@ def test_late_arrival_rejected_not_wedged():
     assert not sj.finished and sj.admitted == -1
 
 
+def test_stream_result_summary_never_aliases():
+    """Regression: ``StreamResult.summary`` once defaulted to a mutable
+    ``{}`` — ONE dict object shared by every result constructed without a
+    summary, so mutating one run's summary leaked into all others.  The
+    default is now immutable (mutation raises instead of leaking) and real
+    constructions carry a fresh dict per result."""
+    from repro.stream.engine import StreamResult
+    a = StreamResult(jobs=[], events=[], meta={})
+    b = StreamResult(jobs=[], events=[], meta={})
+    assert dict(a.summary) == {}
+    with pytest.raises(TypeError):
+        a.summary["leak"] = 1        # pre-fix: silently mutated b too
+    assert dict(b.summary) == {}
+    cfg = StreamConfig(arrivals="poisson", rate=0.05, horizon=128,
+                       n_lanes=2, seed=3)
+    r1, r2 = simulate_stream(cfg), simulate_stream(cfg)
+    assert r1.summary is not r2.summary
+    r1.summary["leak"] = True        # real summaries are per-run dicts
+    assert "leak" not in r2.summary
+
+
+def test_truncated_completion_surfaced_not_dropped():
+    """Regression for the end-of-stream silent drop: a job FULLY PLACED by
+    the final tick whose completion epoch lands past it used to surface
+    ``finished=False`` with no schedule or carbon stats, even though its
+    dispatch is complete and feasible.  It now surfaces finished with
+    ``truncated=True`` (mirroring serve's ``Request.truncated``)."""
+    from repro.core.instance import Job
+    # Single long task arriving late: placeable (so admission accepts and
+    # the dispatcher schedules it) but running well past the trace end.
+    job = Job(arrival=HORIZON - 50, base_durations=(300,), edges=())
+    _, powers, speeds, trace = _jobs(4, "layered", "homog", n=1)
+    eng = StreamEngine(trace, powers, speeds, n_lanes=2,
+                       pad_tasks=PAD_TASKS, theta=1.0)
+    (sj,) = eng.run([job])
+    assert sj.finished, "fully-placed job must not be silently dropped"
+    assert sj.truncated
+    assert sj.completed > HORIZON - 1, "completes past the final tick"
+    assert sj.start is not None and sj.carbon > 0.0
+    assert eng.summary()["jobs_truncated"] == 1
+    # A job that completes inside the stream is NOT flagged.
+    jobs2, powers, speeds, trace = _jobs(5, "layered", "homog", n=1)
+    (sj2,) = StreamEngine(trace, powers, speeds, n_lanes=2,
+                          pad_tasks=PAD_TASKS).run(jobs2)
+    assert sj2.finished and not sj2.truncated
+
+
 def test_stream_config_validation():
     with pytest.raises(ValueError, match="unknown arrival family"):
         StreamConfig(arrivals="nope").validate()

@@ -1,14 +1,24 @@
-"""Golden replay lock on the streaming dispatch service.
+"""Golden replay lock on the streaming dispatch service — both fleet modes.
 
 One tiny seeded stream (bursty arrivals — the shape that exercises queue
 back-pressure) run end to end through ``simulate_stream``; the full
 per-job event log (arrival, admission, queue delay, budget, completion,
-carbon) is locked in ``tests/golden/stream_tiny.json``.  The stream is a
-pure function of its seed, so ANY drift — in the arrival sampler, the job
-generator, the admission solve, the gate thresholds, or the pool tick —
-shows up as a diff here.
+carbon) is locked per fleet mode:
 
-If a change legitimately moves the log (new generator defaults, different
+* ``tests/golden/stream_tiny.json`` — partitioned lanes (the original
+  engine; this file predates the shared fleet and MUST keep passing
+  without regeneration — the ``shared_fleet=False`` bit-exactness
+  contract);
+* ``tests/golden/stream_contention_tiny.json`` — the same stream on ONE
+  shared machine set (``shared_fleet=True``), locking the lane-priority
+  scan, the contended admission solve, and the intra-epoch ``mfree``
+  threading.
+
+The stream is a pure function of its seed, so ANY drift — in the arrival
+sampler, the job generator, the admission solve, the gate thresholds, or
+the pool tick — shows up as a diff here.
+
+If a change legitimately moves a log (new generator defaults, different
 gate semantics), regenerate with
 
     PYTHONPATH=src python tests/test_stream_golden.py --write
@@ -23,42 +33,49 @@ import sys
 import numpy as np
 import pytest
 
-GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
-                           "stream_tiny.json")
+_GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PATH = os.path.join(_GOLDEN_DIR, "stream_tiny.json")
+CONTENTION_GOLDEN_PATH = os.path.join(_GOLDEN_DIR,
+                                      "stream_contention_tiny.json")
 
 EXACT_FIELDS = ("rid", "arrival", "admitted", "queue_delay", "finished",
-                "budget", "greedy_makespan", "completed")
+                "budget", "greedy_makespan", "completed", "truncated")
 
 
-def _tiny_config():
+def _golden_path(shared_fleet: bool) -> str:
+    return CONTENTION_GOLDEN_PATH if shared_fleet else GOLDEN_PATH
+
+
+def _tiny_config(shared_fleet: bool = False):
     from repro.stream import StreamConfig
     return StreamConfig(arrivals="bursty", rate=0.08, horizon=192,
                         n_lanes=3, family="layered", width=3, depth=2,
                         n_machines=3, fleet="tiered", mean_dur=5.0,
-                        theta=0.5, window=96, stretch=1.5, seed=2024)
+                        theta=0.5, window=96, stretch=1.5, seed=2024,
+                        shared_fleet=shared_fleet)
 
 
-def _tiny_run():
+def _tiny_run(shared_fleet: bool = False):
     from repro.stream import simulate_stream
-    res = simulate_stream(_tiny_config())
+    res = simulate_stream(_tiny_config(shared_fleet))
     return {"events": res.events,
             "meta": {k: res.meta[k]
                      for k in ("n_jobs", "n_finished", "pad_tasks",
                                "n_epochs")}}
 
 
-def _load_golden():
-    if not os.path.exists(GOLDEN_PATH):
-        pytest.fail(f"golden file missing: {GOLDEN_PATH} — regenerate with "
+def _load_golden(path):
+    if not os.path.exists(path):
+        pytest.fail(f"golden file missing: {path} — regenerate with "
                     "`PYTHONPATH=src python tests/test_stream_golden.py "
                     "--write`")
-    with open(GOLDEN_PATH) as f:
+    with open(path) as f:
         return json.load(f)
 
 
-def test_stream_tiny_matches_golden():
-    golden = _load_golden()
-    got = _tiny_run()
+def _check_golden(shared_fleet: bool) -> None:
+    golden = _load_golden(_golden_path(shared_fleet))
+    got = _tiny_run(shared_fleet)
     assert got["meta"] == golden["meta"], \
         f"meta drifted: {got['meta']} != {golden['meta']}"
     want_events = golden["events"]
@@ -77,6 +94,20 @@ def test_stream_tiny_matches_golden():
                     err_msg=f"{ctx}.{k}")
 
 
+@pytest.mark.parametrize("shared_fleet", [False, True],
+                         ids=["partitioned", "shared"])
+def test_stream_tiny_matches_golden(shared_fleet):
+    _check_golden(shared_fleet)
+
+
+def test_shared_golden_differs_from_partitioned():
+    """The two goldens must not be the same log — if they ever converge,
+    the shared-fleet path silently stopped contending."""
+    part = _load_golden(GOLDEN_PATH)
+    shared = _load_golden(CONTENTION_GOLDEN_PATH)
+    assert part["events"] != shared["events"]
+
+
 def test_stream_tiny_golden_unchanged_under_tracing(monkeypatch):
     """The telemetry bit-exact contract against the stored golden: the
     same stream re-run with ``REPRO_TRACE=1`` must replay the locked event
@@ -85,7 +116,7 @@ def test_stream_tiny_golden_unchanged_under_tracing(monkeypatch):
     monkeypatch.setenv("REPRO_TRACE", "1")
     set_tracer(None)                 # force env re-read -> fresh tracer
     try:
-        test_stream_tiny_matches_golden()
+        _check_golden(shared_fleet=False)
         tracer = get_tracer()
         assert tracer.enabled and len(tracer.events) > 0
     finally:
@@ -94,11 +125,13 @@ def test_stream_tiny_golden_unchanged_under_tracing(monkeypatch):
 
 def _write_golden():
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    record = _tiny_run()
-    with open(GOLDEN_PATH, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {GOLDEN_PATH}: {record['meta']}")
+    for shared_fleet in (False, True):
+        record = _tiny_run(shared_fleet)
+        path = _golden_path(shared_fleet)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}: {record['meta']}")
 
 
 if __name__ == "__main__":
