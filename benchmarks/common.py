@@ -89,7 +89,11 @@ def machine_fingerprint() -> dict:
 
 
 def provenance() -> dict:
-    """Git SHA, jax/jaxlib versions, device kind/count, timestamp."""
+    """Git SHA, jax/jaxlib versions, device kind/count, process count,
+    timestamp.  ``processes`` > 1 marks a record produced by a
+    ``jax.distributed`` fleet (``device_count`` is then the global count
+    across every process) — ``perf_gate --check-provenance`` validates the
+    column's consistency."""
     import jaxlib
     return {
         "git_sha": _git("rev-parse", "HEAD") or "unknown",
@@ -98,6 +102,7 @@ def provenance() -> dict:
         "jaxlib": jaxlib.__version__,
         "python": platform.python_version(),
         **machine_fingerprint(),
+        "processes": jax.process_count(),
         "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }
 
@@ -352,13 +357,24 @@ def summarize(r: dict) -> dict:
     }
 
 
+def is_primary_process() -> bool:
+    """True on the rank that owns artifact writes (rank 0; trivially true
+    single-process).  Multi-process benchmark results are replicated —
+    every rank holds identical values (the bit-exact contract) — so only
+    one may write, or concurrent ranks race on the same BENCH_*.json."""
+    return jax.process_index() == 0
+
+
 def write_json(path: str, record: dict) -> str:
     """Write a benchmark record as pretty JSON (e.g. BENCH_online.json).
 
     Every record is stamped with :func:`provenance` (git SHA, jax/jaxlib,
-    device kind/count) unless the caller already provided one — no
-    BENCH_*.json leaves the harness untraceable.
+    device kind/count, process count) unless the caller already provided
+    one — no BENCH_*.json leaves the harness untraceable.  On a
+    multi-process fleet only rank 0 writes (results are replicated).
     """
+    if not is_primary_process():
+        return path
     if "provenance" not in record:
         record = {**record, "provenance": provenance()}
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -369,8 +385,10 @@ def write_json(path: str, record: dict) -> str:
 
 
 def write_csv(name: str, rows: list[dict]) -> str:
-    os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.csv")
+    if not is_primary_process():
+        return path
+    os.makedirs(OUT_DIR, exist_ok=True)
     if rows:
         keys = list(rows[0])
         with open(path, "w") as f:

@@ -22,12 +22,18 @@ Adam loop), so equal seeds reproduce the JSON bit-for-bit.
 """
 from __future__ import annotations
 
+# Join any jax.distributed fleet before jax-touching imports — see the
+# matching prelude in benchmarks/structure_sweep.py.
+from repro.shard.distributed import initialize_from_env
+
+initialize_from_env()
+
 import argparse
 import os
 import time
 
 from benchmarks.common import bench_timing, write_csv, write_json
-from benchmarks.structure_sweep import check_devices, make_spec
+from benchmarks.structure_sweep import check_topology, make_spec
 from repro.learn import LearnConfig
 from repro.scenarios import learned_summary, sweep_structure, trend_summary
 
@@ -57,8 +63,9 @@ def _csv_row(r: dict) -> dict:
 
 def run(tiny: bool = False, steps: int | None = None,
         instances_per_cell: int | None = None, out: str | None = None,
-        seed: int = 2024, devices: int | None = None) -> list[dict]:
-    devices = check_devices(devices)
+        seed: int = 2024, devices: int | None = None,
+        processes: int | None = None) -> list[dict]:
+    devices, processes = check_topology(devices, processes)
     spec = make_spec(tiny=tiny, instances_per_cell=instances_per_cell,
                      seed=seed)
     cfg = TINY_LEARN if tiny else FULL_LEARN
@@ -67,7 +74,7 @@ def run(tiny: bool = False, steps: int | None = None,
 
     t0 = time.time()
     rows, meta = sweep_structure(spec, offline=False, learn=cfg,
-                                 devices=devices)
+                                 devices=devices, processes=processes)
     seconds = time.time() - t0
     summary, ok = learned_summary(rows)
 
@@ -88,7 +95,8 @@ def run(tiny: bool = False, steps: int | None = None,
 
     print(f"# learned_gate[{record['mode']}]: {len(rows)} cells x "
           f"{spec.instances_per_cell} instances, {cfg.steps} steps "
-          f"in {seconds:.1f}s on {meta['devices']} device(s) — "
+          f"in {seconds:.1f}s on {meta['processes']} process(es) x "
+          f"{meta['devices']} device(s) — "
           f"learned >= fixed everywhere: {ok}",
           flush=True)
     for fam, by_sx in summary.items():
@@ -122,13 +130,19 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the instance axis over N local devices "
                          "(bit-exact; 'seconds'/'devices' record the "
-                         "sharded wall clock)")
+                         "sharded wall clock); with --processes, devices "
+                         "per process")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="span the shards over a P-process jax.distributed "
+                         "fleet (bit-exact; run one worker per rank via "
+                         "python -m tests.harness --processes P --devices D "
+                         "-- <this command>)")
     ap.add_argument("--out", type=str, default=None,
                     help=f"output JSON path (default {BENCH_JSON})")
     args = ap.parse_args()
     run(tiny=args.tiny, steps=args.steps,
         instances_per_cell=args.instances, out=args.out, seed=args.seed,
-        devices=args.devices)
+        devices=args.devices, processes=args.processes)
 
 
 if __name__ == "__main__":

@@ -139,6 +139,39 @@ def _resolve_entry(entry: str) -> str | None:
     return "no importable module prefix"
 
 
+def _check_processes(path: str, record: dict, prov: dict) -> list[str]:
+    """Validate the ``processes`` provenance column (multi-process runs).
+
+    Records written before the column existed — single-process baselines —
+    are accepted as-is (the skip-path).  When present, ``processes`` must
+    be a positive int, must agree with the record-level ``processes``
+    column the sweep meta stamps, and on a genuine fleet (> 1) the global
+    ``device_count`` must split evenly across processes — the
+    process-spanning mesh is process-uniform by construction.
+    """
+    procs = prov.get("processes")
+    if procs is None:
+        return []   # pre-multiprocess record: single-process skip-path
+    problems = []
+    if not isinstance(procs, int) or procs < 1:
+        problems.append(
+            f"{path}: provenance 'processes' {procs!r} is not a positive "
+            "int")
+        return problems
+    meta_procs = record.get("processes")
+    if meta_procs is not None and meta_procs != procs:
+        problems.append(
+            f"{path}: processes column mismatch — provenance stamped "
+            f"{procs} but the record's sweep meta says {meta_procs}")
+    dc = prov.get("device_count")
+    if procs > 1 and isinstance(dc, int) and dc % procs:
+        problems.append(
+            f"{path}: device_count {dc} does not divide across "
+            f"{procs} processes — a process-spanning mesh is "
+            "process-uniform, so this record's topology is inconsistent")
+    return problems
+
+
 def check_provenance(patterns: list[str]) -> list[str]:
     """Missing-field report for the CI artifact check (empty == pass).
 
@@ -146,7 +179,9 @@ def check_provenance(patterns: list[str]) -> list[str]:
     ``entry`` (the dotted path of the function it times) must resolve
     against the *current* tree — stale probes pointing at removed or
     renamed kernel entry points fail here instead of silently gating on
-    dead code.
+    dead code.  The ``processes`` column, when stamped, is validated for
+    topology consistency (:func:`_check_processes`); records from before
+    the column existed pass unchanged.
     """
     problems = []
     paths = [p for pattern in patterns for p in sorted(glob.glob(pattern))]
@@ -167,6 +202,7 @@ def check_provenance(patterns: list[str]) -> list[str]:
         for field in REQUIRED_PROVENANCE:
             if field not in prov:
                 problems.append(f"{path}: provenance missing {field!r}")
+        problems.extend(_check_processes(path, record, prov))
         timing = record.get("timing")
         probe = extract_probe(record)
         if timing is not None and probe is None:

@@ -26,6 +26,14 @@ uploads the JSON as an artifact.
 """
 from __future__ import annotations
 
+# jax.distributed must initialize before ANY jax computation, and some
+# transitive imports below build module-level jnp constants — so join the
+# fleet (a no-op in a plain single-process run, see docs/sharding.md)
+# before importing anything that touches jax.
+from repro.shard.distributed import initialize_from_env
+
+initialize_from_env()
+
 import argparse
 import os
 import time
@@ -98,14 +106,48 @@ def check_devices(devices: int | None) -> int | None:
     return int(devices)
 
 
+def check_topology(devices: int | None,
+                   processes: int | None) -> tuple[int | None, int | None]:
+    """Join the ``jax.distributed`` fleet (if the ``REPRO_*`` env names
+    one) and validate ``--devices``/``--processes`` against it.
+
+    Must run before anything touches jax devices — process topology locks
+    at first backend init.  Single-process (``processes=None``) reduces to
+    :func:`check_devices`; with ``--processes`` the command must be
+    running once per rank (``python -m tests.harness --processes P
+    --devices D -- <this command>`` spawns that), and ``devices`` counts
+    fake devices *per process*.
+    """
+    from repro.shard.distributed import initialize_from_env
+    initialize_from_env()
+    if processes is None:
+        return check_devices(devices), None
+    import jax
+    if jax.process_count() != processes:
+        raise SystemExit(
+            f"--processes {processes}: this run has {jax.process_count()} "
+            "jax process(es) — launch one worker per rank, e.g. "
+            f"python -m tests.harness --processes {processes} "
+            f"--devices {devices or 1} -- <this command>")
+    if devices is not None and devices > len(jax.local_devices()):
+        raise SystemExit(
+            f"--devices {devices}: only {len(jax.local_devices())} local "
+            "device(s) per process — the harness forces "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={devices} "
+            "in every worker")
+    return devices, int(processes)
+
+
 def run(tiny: bool = False, offline: bool = True,
         instances_per_cell: int | None = None, out: str | None = None,
-        seed: int = 2024, devices: int | None = None) -> list[dict]:
-    devices = check_devices(devices)
+        seed: int = 2024, devices: int | None = None,
+        processes: int | None = None) -> list[dict]:
+    devices, processes = check_topology(devices, processes)
     spec = make_spec(tiny=tiny, instances_per_cell=instances_per_cell,
                      seed=seed)
     t0 = time.time()
-    rows, meta = sweep_structure(spec, offline=offline, devices=devices)
+    rows, meta = sweep_structure(spec, offline=offline, devices=devices,
+                                 processes=processes)
     seconds = time.time() - t0
 
     trends = trend_summary(rows)
@@ -125,8 +167,8 @@ def run(tiny: bool = False, offline: bool = True,
 
     print(f"# structure_sweep[{record['mode']}]: {len(rows)} cells x "
           f"{spec.instances_per_cell} instances in {seconds:.1f}s "
-          f"on {meta['devices']} device(s) "
-          f"(pad T={meta['pad_tasks']}, M={meta['pad_machines']})",
+          f"on {meta['processes']} process(es) x {meta['devices']} "
+          f"device(s) (pad T={meta['pad_tasks']}, M={meta['pad_machines']})",
           flush=True)
     for key, series in trends.items():
         print(f"#   {key}: {series}", flush=True)
@@ -152,13 +194,19 @@ def main() -> None:
                     help="shard the instance axis over N local devices "
                          "(bit-exact with the single-device sweep; the "
                          "'seconds'/'devices' columns record the sharded "
-                         "wall clock)")
+                         "wall clock); with --processes, devices per "
+                         "process")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="span the shards over a P-process jax.distributed "
+                         "fleet (bit-exact; run one worker per rank via "
+                         "python -m tests.harness --processes P --devices D "
+                         "-- <this command>)")
     ap.add_argument("--out", type=str, default=None,
                     help=f"output JSON path (default {BENCH_JSON})")
     args = ap.parse_args()
     run(tiny=args.tiny, offline=not args.no_offline,
         instances_per_cell=args.instances, out=args.out, seed=args.seed,
-        devices=args.devices)
+        devices=args.devices, processes=args.processes)
 
 
 if __name__ == "__main__":

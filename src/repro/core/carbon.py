@@ -131,6 +131,10 @@ def from_csv(path: str, name: str = "csv", column: int = 1,
     """
     vals = np.atleast_1d(np.genfromtxt(path, delimiter=",", skip_header=1,
                                        usecols=(column,))).astype(np.float64)
+    if vals.size < 2:
+        raise ValueError(
+            f"{path}: only {vals.size} data row(s) — a trace needs at "
+            "least 2 rows to define a time axis (truncated export?)")
     finite = np.isfinite(vals)
     if not finite.any():
         raise ValueError(f"{path}: no finite intensity values in column "

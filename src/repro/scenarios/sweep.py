@@ -120,7 +120,8 @@ def _batch_eval(batch, start, assign, cum):
 
 
 def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
-                    devices: int | None = None) -> tuple[list[dict], dict]:
+                    devices: int | None = None,
+                    processes: int | None = None) -> tuple[list[dict], dict]:
     """Run the sweep; returns (one aggregate row per cell, meta).
 
     Row fields: the cell parameters; greedy-dispatch carbon/makespan/
@@ -144,23 +145,30 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
     ``devices`` (int, default None == single device) shards the instance
     axis of every program in the sweep — the gated dispatch, the offline SA
     bound and the learner — over that many local devices via
-    :mod:`repro.shard`.  Sharded results are **bit-exact** with the
-    single-device sweep (the parity contract ``tests/test_shard.py`` and
-    the sharded golden re-runs lock), so ``devices`` only changes
-    wall-clock, never a number.
+    :mod:`repro.shard`.  ``processes`` (int, default None == this process
+    only) spans those shards across a ``jax.distributed`` fleet —
+    ``devices`` then counts devices *per process* (``None`` == all of
+    each process's local devices), and every process must be running this
+    same call (``tests/harness.py`` / ``python -m tests.harness`` spawn
+    that).  Sharded results are **bit-exact** with the single-device sweep
+    (the parity contracts ``tests/test_shard.py`` /
+    ``tests/test_distributed.py`` and the sharded golden re-runs lock), so
+    ``devices``/``processes`` only change wall-clock, never a number.
     """
-    if devices is not None:
+    sharded = devices is not None or processes is not None
+    if sharded:
         from repro.shard import (bilevel_sharded, dispatch_sharded,
                                  eval_theta_sharded, train_sharded)
     sb = build_batch(spec)
     B = int(sb.cell_of.shape[0])
 
-    if devices is None:
+    if not sharded:
         res = sweep_policies(sb.batch, sb.intensity, spec.thetas,
                              spec.windows, spec.stretches)
     else:
         res = dispatch_sharded(sb.batch, sb.intensity, spec.thetas,
-                               spec.windows, spec.stretches, devices=devices)
+                               spec.windows, spec.stretches, devices=devices,
+                               processes=processes)
     mask = np.asarray(sb.batch.task_mask)
     if not (np.asarray(res.greedy.scheduled) | ~mask).all():
         raise AssertionError("greedy dispatch incomplete: raise spec.horizon")
@@ -191,13 +199,14 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
 
     if offline:
         keys = jax.random.split(jax.random.key(spec.seed), B)
-        if devices is None:
+        if not sharded:
             bires = solve_bilevel_batch(sb.batch, sb.cum, keys,
                                         objective="carbon",
                                         stretch=spec.offline_stretch,
                                         cfg1=spec.sa, cfg2=spec.sa)
         else:
             bires = bilevel_sharded(sb.batch, sb.cum, keys, devices=devices,
+                                    processes=processes,
                                     objective="carbon",
                                     stretch=spec.offline_stretch,
                                     cfg1=spec.sa, cfg2=spec.sa)
@@ -232,7 +241,7 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
                 theta0[ci], window0[ci] = th[j], wi[j]
                 fixed_best[ci] = psav.max()
             wins = window0[sb.cell_of]
-            if devices is None:
+            if not sharded:
                 tr = train_gate(sb.batch, sb.intensity, sb.cum, sb.cell_of,
                                 wins, float(sx_val), theta0, cfg=learn,
                                 baseline=greedy_ref)
@@ -240,11 +249,12 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
                 tr = train_sharded(sb.batch, sb.intensity, sb.cum,
                                    sb.cell_of, wins, float(sx_val), theta0,
                                    cfg=learn, baseline=greedy_ref,
-                                   devices=devices)
+                                   devices=devices, processes=processes)
             theta_l = np.asarray(tr.theta)
-            eval_fn = (evaluate_theta if devices is None else
+            eval_fn = (evaluate_theta if not sharded else
                        functools.partial(eval_theta_sharded,
-                                         devices=devices))
+                                         devices=devices,
+                                         processes=processes))
             s_l, _, _, _ = eval_fn(
                 sb.batch, sb.intensity, sb.cum,
                 jnp.asarray(theta_l)[sb.cell_of], wins, float(sx_val),
@@ -311,7 +321,9 @@ def sweep_structure(spec: SweepSpec, offline: bool = True, learn=None,
         "pad_machines": int(sb.batch.M),
         "offline": bool(offline),
         "offline_stretch": spec.offline_stretch,
-        "devices": int(devices) if devices is not None else 1,
+        "devices": (int(devices) if devices is not None else
+                    len(jax.local_devices()) if sharded else 1),
+        "processes": int(processes) if processes is not None else 1,
     }
     if learn is not None:
         meta["learn"] = dict(learn._asdict())

@@ -11,6 +11,9 @@ padding contract (:mod:`repro.scenarios.batching`).
 
     compat    — the single ``jax.shard_map`` / ``jax.experimental.
                 shard_map`` API bridge (hoisted from ``models/moe.py``)
+    distributed — ``jax.distributed`` wiring: coordinator/process-id
+                init (args or ``REPRO_*`` env) + the canonical
+                process-major device order for process-spanning meshes
     batch     — the ``"inst"`` device mesh + the generic row-sharded runner
     dispatch  — ``dispatch_sharded``: the gate-policy sweep
                 (``sweep_policies`` / batched ``online_carbon_gated_jax``)
@@ -20,10 +23,12 @@ padding contract (:mod:`repro.scenarios.batching`).
                 scanned Adam loop with canonically-reduced per-row grads
 
 The headline contract, property-tested in ``tests/test_shard.py`` across
-all scenario families x fleets: **sharded output is bit-exact with the
-single-device output, for any device count** — 1, 2, 4 and 8 devices all
-produce identical results, and the tiny golden grids reproduce their
-golden JSONs unchanged when run sharded.
+all scenario families x fleets and extended across process fleets by
+``tests/test_distributed.py``: **sharded output is bit-exact with the
+single-device output, for any (process count, device count)** — 1, 2, 4
+and 8 devices, single- or multi-process, all produce identical results,
+and the tiny golden grids reproduce their golden JSONs unchanged when run
+sharded.
 
 Exports resolve lazily (PEP 562) so that importing the leaf
 ``repro.shard.compat`` bridge (as ``models/moe.py`` does) never drags the
@@ -33,6 +38,9 @@ from __future__ import annotations
 
 _EXPORTS = {
     "shard_map_compat": "repro.shard.compat",
+    "initialize": "repro.shard.distributed",
+    "initialize_from_env": "repro.shard.distributed",
+    "mesh_devices": "repro.shard.distributed",
     "AXIS": "repro.shard.batch",
     "device_count": "repro.shard.batch",
     "instance_mesh": "repro.shard.batch",

@@ -20,6 +20,15 @@ on, and padded rows are sliced off before anything consumes them.  Sharded
 output therefore equals single-device output *exactly*, for any device
 count — the parity contract ``tests/test_shard.py`` locks across all
 scenario families x fleets.
+
+**Multi-process.**  With ``processes=P`` the mesh spans ``jax.devices()``
+across a ``jax.distributed`` fleet in the canonical process-major order of
+:func:`repro.shard.distributed.mesh_devices`; ``devices`` then counts
+devices *per process*.  The only collective the multi-process runner adds
+is a trailing ``all_gather`` that moves every device's finished row shard
+back into canonical row order (``out_specs=P()``) — rows move, nothing is
+reduced, so the bit-exact contract is unchanged at any (process count,
+device count) with the same total (``tests/test_distributed.py``).
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.instance import PackedInstance
 from repro.scenarios.batching import pad_stacked
+from repro.shard import distributed
 from repro.shard.compat import shard_map_compat
 
 AXIS = "inst"   # the one mesh axis: stacked-instance (batch) rows
@@ -44,13 +54,34 @@ def device_count() -> int:
     return len(jax.devices())
 
 
-def instance_mesh(devices: int | None = None) -> Mesh:
-    """1-D mesh over the first ``devices`` local devices (default: all).
+def instance_mesh(devices: int | None = None,
+                  processes: int | None = None,
+                  process_order: tuple[int, ...] | None = None) -> Mesh:
+    """1-D mesh over the ``"inst"`` axis — local or process-spanning.
 
-    Raises with the ``XLA_FLAGS`` recipe when more devices are requested
-    than the platform exposes — on CPU, fake devices must be forced before
-    the first jax call: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    ``processes=None`` (the default) is the single-process mesh over the
+    first ``devices`` local devices (default: all), unchanged from PR 5.
+    ``processes=P`` builds the process-spanning mesh: ``devices`` then
+    counts devices *per process* and the mesh runs over
+    :func:`repro.shard.distributed.mesh_devices` — process-major, so row
+    blocks land on processes in canonical id order regardless of spawn
+    order.  Raises with the ``XLA_FLAGS`` recipe when more devices are
+    requested than the platform exposes — on CPU, fake devices must be
+    forced before the first jax call:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
     """
+    if processes is not None:
+        procs = int(processes)
+        if procs != jax.process_count():
+            raise ValueError(
+                f"instance_mesh: processes={procs} but this runtime has "
+                f"{jax.process_count()} jax process(es) — launch one worker "
+                "per process under jax.distributed (see tests/harness.py / "
+                "python -m tests.harness) with "
+                "repro.shard.distributed.initialize_from_env()")
+        devs = distributed.mesh_devices(devices_per_process=devices,
+                                        process_order=process_order)
+        return Mesh(np.asarray(devs), (AXIS,))
     avail = jax.devices()
     n = len(avail) if devices is None else int(devices)
     if n < 1:
@@ -100,8 +131,48 @@ def _sharded_callable(fn: Callable, n_dev: int, n_args: int) -> Callable:
                                     out_specs=P(AXIS)))
 
 
+@functools.lru_cache(maxsize=512)
+def _sharded_callable_mp(fn: Callable, processes: int, devices: int | None,
+                         process_order: tuple[int, ...] | None,
+                         n_args: int):
+    """Memoized (mesh, jitted shard_map) for the process-spanning path.
+
+    The per-shard body is ``fn`` unchanged, followed by a tiled
+    ``all_gather`` over the mesh axis so every process holds every row in
+    canonical order (``out_specs=P()`` — fully replicated).  The gather
+    only *moves* rows; per-row floating point is untouched."""
+    mesh = instance_mesh(devices=devices, processes=processes,
+                         process_order=process_order)
+
+    def gathered(*a):
+        out = fn(*a)
+        return jax.tree.map(
+            lambda x: jax.lax.all_gather(x, AXIS, axis=0, tiled=True), out)
+
+    return mesh, jax.jit(shard_map_compat(gathered, mesh=mesh,
+                                          in_specs=(P(AXIS),) * n_args,
+                                          out_specs=P()))
+
+
+def _make_global(a, mesh: Mesh, rows: bool = True):
+    """Lift one (host-replicated, already padded) argument into a global
+    array across the process-spanning mesh — sharded on its leading row
+    axis (``rows=True``) or fully replicated (``rows=False``).  Every
+    process holds the same full host value, so each just hands XLA the
+    blocks its local devices own."""
+    def leaf(x):
+        x = np.asarray(x)
+        spec = P(AXIS) if (rows and x.ndim) else P()
+        sh = jax.sharding.NamedSharding(mesh, spec)
+        return jax.make_array_from_callback(x.shape, sh,
+                                            lambda idx, x=x: x[idx])
+    return jax.tree.map(leaf, a)
+
+
 def run_rows_sharded(fn: Callable, args: Sequence,
-                     devices: int | None = None):
+                     devices: int | None = None,
+                     processes: int | None = None,
+                     process_order: tuple[int, ...] | None = None):
     """Run ``fn(*args)`` sharded over the leading row axis of every arg.
 
     ``fn`` must be a row-wise-independent batched program (a ``vmap`` over
@@ -109,9 +180,20 @@ def run_rows_sharded(fn: Callable, args: Sequence,
     output leaf must carry the row axis first.  Rows are padded to a device
     multiple (inert rows / zero rows), each device runs ``fn`` on its
     contiguous row shard, and outputs come back sliced to the real rows.
+
+    With ``processes=P`` the shards span the ``jax.distributed`` fleet
+    (``devices`` per process); inputs are lifted to global arrays from the
+    host-replicated batch and outputs are all-gathered back to canonical
+    row order on every process, returned as host arrays.
     """
-    n_dev = int(instance_mesh(devices).size)
     B = _leading_rows(args)
-    padded = tuple(_pad_rows(a, round_up(B, n_dev)) for a in args)
-    out = _sharded_callable(fn, n_dev, len(padded))(*padded)
-    return jax.tree.map(lambda x: x[:B], out)
+    if processes is None:
+        n_dev = int(instance_mesh(devices).size)
+        padded = tuple(_pad_rows(a, round_up(B, n_dev)) for a in args)
+        out = _sharded_callable(fn, n_dev, len(padded))(*padded)
+        return jax.tree.map(lambda x: x[:B], out)
+    mesh, call = _sharded_callable_mp(fn, int(processes), devices,
+                                      process_order, len(args))
+    padded = tuple(_pad_rows(a, round_up(B, int(mesh.size))) for a in args)
+    out = call(*tuple(_make_global(a, mesh) for a in padded))
+    return jax.tree.map(lambda x: np.asarray(x)[:B], out)

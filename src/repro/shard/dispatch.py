@@ -45,14 +45,17 @@ def _per_shard_sweep(thetas: tuple, windows: tuple, stretches: tuple,
 
 def dispatch_sharded(batch: PackedInstance, intensity, thetas, windows,
                      stretches, machine_rule: str = "earliest_finish",
-                     devices: int | None = None) -> SweepResult:
+                     devices: int | None = None,
+                     processes: int | None = None) -> SweepResult:
     """``sweep_policies`` with the instance axis sharded over ``devices``.
 
     Same signature and same (bit-exact) :class:`~repro.core.solvers.
     online_jax.SweepResult` as the single-device sweep; ``devices=None``
-    uses every local device.  A single-policy call — one theta, one window,
-    one stretch — is the sharded batched equivalent of
-    ``online_carbon_gated_jax`` (``.gated`` squeezed on the policy axis,
+    uses every local device.  ``processes=P`` spans the mesh across a
+    ``jax.distributed`` fleet (``devices`` then counts per process) — see
+    :func:`repro.shard.batch.run_rows_sharded`.  A single-policy call —
+    one theta, one window, one stretch — is the sharded batched equivalent
+    of ``online_carbon_gated_jax`` (``.gated`` squeezed on the policy axis,
     ``.greedy`` the baseline, ``.budget`` the stretch cap).
     """
     intensity = jnp.asarray(intensity)
@@ -62,4 +65,5 @@ def dispatch_sharded(batch: PackedInstance, intensity, thetas, windows,
         tuple(int(w) for w in windows_np),
         tuple(float(s) for s in np.asarray(stretches, np.float32)),
         int(intensity.shape[-1]), int(windows_np.max()), machine_rule)
-    return run_rows_sharded(per_shard, (batch, intensity), devices=devices)
+    return run_rows_sharded(per_shard, (batch, intensity), devices=devices,
+                            processes=processes)

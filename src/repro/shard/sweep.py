@@ -36,7 +36,8 @@ from repro.shard.batch import _pad_rows, instance_mesh, round_up
 
 
 def bilevel_sharded(insts: PackedInstance, cums, keys,
-                    devices: int | None = None, **kw) -> BilevelResult:
+                    devices: int | None = None,
+                    processes: int | None = None, **kw) -> BilevelResult:
     """``solve_bilevel_batch`` with the instance axis sharded.
 
     ``keys`` is the same ``[B]`` typed-key array the batched solver takes;
@@ -45,12 +46,19 @@ def bilevel_sharded(insts: PackedInstance, cums, keys,
     compiled program (see module docstring for why this path dispatches
     per device instead of shard_mapping), and results come back
     concatenated in row order, sliced to the real rows.
+
+    With ``processes=P`` (``devices`` per process) each process dispatches
+    only the contiguous row block its canonical process id owns — the same
+    per-device pattern, one level up — then
+    ``multihost_utils.process_allgather`` concatenates the blocks in
+    process-id order, which *is* canonical row order.  Each device still
+    runs the identical compiled program on identically-shaped shards, so
+    the SA trajectories — and therefore the bound — are bit-exact at any
+    (process count, device count) with the same total.
     """
-    mesh = instance_mesh(devices)
-    devs = list(mesh.devices.ravel())
-    n_dev = len(devs)
+    mesh = instance_mesh(devices, processes=processes)
     B = int(jnp.asarray(cums).shape[0])
-    rows = round_up(B, n_dev)
+    rows = round_up(B, int(mesh.size))
     pad = rows - B
     if pad:
         kd = jax.random.key_data(keys)
@@ -58,25 +66,43 @@ def bilevel_sharded(insts: PackedInstance, cums, keys,
             [kd, jnp.zeros((pad,) + kd.shape[1:], kd.dtype)]))
     insts_p = _pad_rows(insts, rows)
     cums_p = _pad_rows(cums, rows)
-    per = rows // n_dev
+    if processes is None:
+        devs = list(mesh.devices.ravel())
+        base = 0
+    else:
+        # Canonical id order, independent of process_order / spawn order:
+        # process p owns rows [p*rows/P, (p+1)*rows/P) on its mesh-local
+        # devices.
+        pid = jax.process_index()
+        devs = [d for d in mesh.devices.ravel() if d.process_index == pid]
+        base = pid * (rows // jax.process_count())
+    per = rows // int(mesh.size)
     shards = []
     for i, dev in enumerate(devs):
-        sl = slice(i * per, (i + 1) * per)
+        sl = slice(base + i * per, base + (i + 1) * per)
         args = jax.tree.map(lambda x: jax.device_put(x[sl], dev),
                             (insts_p, cums_p, keys))
         shards.append(solve_bilevel_batch(*args, **kw))   # async, on dev i
     out = jax.tree.map(lambda *xs: np.concatenate(
-        [np.asarray(x) for x in xs])[:B], *shards)
+        [np.asarray(x) for x in xs]), *shards)
+    if processes is not None:
+        from jax.experimental import multihost_utils
+        out = multihost_utils.process_allgather(out, tiled=True)
+    out = jax.tree.map(lambda x: x[:B], out)
     return jax.tree.map(jnp.asarray, out)
 
 
 def sweep_sharded(spec, offline: bool = True, learn=None,
-                  devices: int | None = None):
+                  devices: int | None = None,
+                  processes: int | None = None):
     """The full structure sweep, sharded: ``(rows, meta)`` as
     :func:`~repro.scenarios.sweep.sweep_structure` returns them, bit-exact
     with the single-device sweep.  ``devices=None`` uses every local
-    device."""
+    device (every device per process when ``processes=P``)."""
     from repro.scenarios.sweep import sweep_structure   # lazy: avoids cycle
     from repro.shard.batch import device_count
+    if processes is not None:
+        return sweep_structure(spec, offline=offline, learn=learn,
+                               devices=devices, processes=processes)
     return sweep_structure(spec, offline=offline, learn=learn,
                            devices=devices or device_count())

@@ -39,8 +39,8 @@ from repro.core.solvers.online_jax import online_greedy_jax, sorted_windows
 from repro.learn.train import (LearnConfig, TrainResult, _hard_eval,
                                build_train_step, logit, run_train_scan,
                                train_opt_cfg)
-from repro.shard.batch import (AXIS, _pad_rows, instance_mesh, round_up,
-                               run_rows_sharded)
+from repro.shard.batch import (AXIS, _make_global, _pad_rows, instance_mesh,
+                               round_up, run_rows_sharded)
 from repro.shard.compat import shard_map_compat
 
 
@@ -67,18 +67,21 @@ def _per_shard_hard_eval(max_window: int, n_epochs: int, machine_rule: str):
 
 def greedy_sharded(batch: PackedInstance, cum, n_epochs: int,
                    machine_rule: str = "earliest_finish",
-                   devices: int | None = None):
+                   devices: int | None = None,
+                   processes: int | None = None):
     """Sharded :func:`repro.learn.train.greedy_reference`:
     per-instance greedy baseline ``(makespan [B], carbon [B])``."""
     return run_rows_sharded(_per_shard_greedy(n_epochs, machine_rule),
-                            (batch, jnp.asarray(cum)), devices=devices)
+                            (batch, jnp.asarray(cum)), devices=devices,
+                            processes=processes)
 
 
 def _train_sharded(batch, intensity, cum, group_of, window, budget,
                    base_carbon, ms0, feats, raw0, cfg: LearnConfig,
                    max_window: int, n_epochs: int,
-                   devices: int | None) -> TrainResult:
-    mesh = instance_mesh(devices)
+                   devices: int | None,
+                   processes: int | None = None) -> TrainResult:
+    mesh = instance_mesh(devices, processes=processes)
     B = int(intensity.shape[0])
     rows = round_up(B, int(mesh.size))
     pads = tuple(_pad_rows(a, rows) for a in
@@ -124,8 +127,19 @@ def _train_sharded(batch, intensity, cum, group_of, window, budget,
         # gathered rows and runs the identical deterministic reduction and
         # Adam update.
         out_specs=P())
-    raw, losses, ratios, thetas = jax.jit(fn)(*pads, raw0, base_c_full,
-                                              ms_norm_full)
+    if processes is None:
+        raw, losses, ratios, thetas = jax.jit(fn)(*pads, raw0, base_c_full,
+                                                  ms_norm_full)
+    else:
+        # Multi-process: same program, inputs lifted to global arrays —
+        # row shards by mesh position, replicated leaves everywhere.  The
+        # replicated outputs come back to host so callers see plain local
+        # arrays, identical to the single-process result.
+        g = tuple(_make_global(p, mesh) for p in pads) + tuple(
+            _make_global(x, mesh, rows=False)
+            for x in (raw0, base_c_full, ms_norm_full))
+        raw, losses, ratios, thetas = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)), jax.jit(fn)(*g))
     return TrainResult(raw=raw, theta=jax.nn.sigmoid(raw[:, 0]),
                        loss_curve=losses, carbon_curve=ratios,
                        theta_curve=thetas)
@@ -134,13 +148,16 @@ def _train_sharded(batch, intensity, cum, group_of, window, budget,
 def train_sharded(batch: PackedInstance, intensity, cum, group_of, window,
                   stretch: float, theta0, cfg: LearnConfig = LearnConfig(),
                   feats=None, baseline=None,
-                  devices: int | None = None) -> TrainResult:
+                  devices: int | None = None,
+                  processes: int | None = None) -> TrainResult:
     """:func:`repro.learn.train.train_gate` with instances sharded over
     ``devices`` (default: all local devices).
 
-    Same signature plus ``devices``, same :class:`~repro.learn.train.
-    TrainResult`, bit-exact with the single-device learner — the parity
-    and device-count-invariance contracts ``tests/test_shard.py`` locks.
+    Same signature plus ``devices``/``processes`` (``processes=P`` spans
+    the ``jax.distributed`` fleet, ``devices`` per process), same
+    :class:`~repro.learn.train.TrainResult`, bit-exact with the
+    single-device learner — the parity and device-count-invariance
+    contracts ``tests/test_shard.py`` / ``tests/test_distributed.py`` lock.
     """
     intensity = jnp.asarray(intensity, jnp.float32)
     n_epochs = int(intensity.shape[-1])
@@ -148,7 +165,7 @@ def train_sharded(batch: PackedInstance, intensity, cum, group_of, window,
     max_window = int(window.max())
     ms0, base_c = (baseline if baseline is not None else
                    greedy_sharded(batch, cum, n_epochs, cfg.machine_rule,
-                                  devices=devices))
+                                  devices=devices, processes=processes))
     ms0 = jnp.asarray(ms0, jnp.int32)
     base_c = jnp.asarray(base_c, jnp.float32)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
@@ -160,15 +177,18 @@ def train_sharded(batch: PackedInstance, intensity, cum, group_of, window,
     return _train_sharded(batch, intensity, jnp.asarray(cum),
                           jnp.asarray(group_of), jnp.asarray(window), budget,
                           base_c, ms0, jnp.asarray(feats, jnp.float32), raw0,
-                          cfg, max_window, n_epochs, devices)
+                          cfg, max_window, n_epochs, devices,
+                          processes=processes)
 
 
 def eval_theta_sharded(batch: PackedInstance, intensity, cum, theta, window,
                        stretch: float,
                        machine_rule: str = "earliest_finish", baseline=None,
-                       devices: int | None = None):
+                       devices: int | None = None,
+                       processes: int | None = None):
     """Sharded :func:`repro.learn.train.evaluate_theta`: hard-dispatch
-    evaluation of learned thetas, instances split over ``devices``.
+    evaluation of learned thetas, instances split over ``devices``
+    (per process when ``processes=P`` spans the fleet).
     Returns the same ``(savings, gated_carbon, base_carbon, ms_ratio)``
     per-instance arrays, bit-exact with the single-device evaluation."""
     intensity = jnp.asarray(intensity, jnp.float32)
@@ -177,7 +197,7 @@ def eval_theta_sharded(batch: PackedInstance, intensity, cum, theta, window,
     max_window = int(window.max())
     ms0, base_c = (baseline if baseline is not None else
                    greedy_sharded(batch, cum, n_epochs, machine_rule,
-                                  devices=devices))
+                                  devices=devices, processes=processes))
     ms0 = jnp.asarray(ms0, jnp.int32)
     base_c = jnp.asarray(base_c, jnp.float32)
     budget = (jnp.float32(stretch) * ms0.astype(jnp.float32)).astype(
@@ -186,7 +206,7 @@ def eval_theta_sharded(batch: PackedInstance, intensity, cum, theta, window,
     gated_c, gated_ms, done = run_rows_sharded(
         _per_shard_hard_eval(max_window, n_epochs, machine_rule),
         (batch, intensity, jnp.asarray(cum), jnp.asarray(theta, jnp.float32),
-         jnp.asarray(window), budget), devices=devices)
+         jnp.asarray(window), budget), devices=devices, processes=processes)
     if not bool(jnp.all(done)):
         raise AssertionError(
             "gated dispatch incomplete at evaluation — raise the horizon")

@@ -92,3 +92,35 @@ def test_from_csv_edge_gap_raises(tmp_path):
 def test_from_csv_all_nan_raises(tmp_path):
     with pytest.raises(ValueError, match="no finite"):
         from_csv(_write_csv(tmp_path, ["nan", "", "nan"]))
+
+
+def test_from_csv_adjacent_nan_runs_interpolate_independently(tmp_path):
+    """Two NaN runs separated by one finite anchor: each run interpolates
+    against its *own* bracketing anchors — the shared middle anchor must
+    not smear one run's slope into the other."""
+    path = _write_csv(tmp_path, ["100.0", "nan", "nan", "200.0", "nan",
+                                 "600.0"])
+    hourly = from_csv(path).intensity[::EPOCHS_PER_HOUR]
+    # run 1 ramps 100 -> 200 (slope ~33/row); run 2 ramps 200 -> 600
+    # (slope 200/row) — different slopes on either side of the anchor.
+    np.testing.assert_allclose(
+        hourly, [100.0, 400 / 3, 500 / 3, 200.0, 400.0, 600.0], rtol=1e-6)
+
+
+def test_from_csv_single_row_raises(tmp_path):
+    with pytest.raises(ValueError, match="at least 2 rows"):
+        from_csv(_write_csv(tmp_path, ["250.0"]))
+
+
+def test_from_csv_all_nan_column_in_multicolumn_file_raises(tmp_path):
+    """A real export can have one dead sensor column while others are fine
+    — selecting it must raise about *that column*, not succeed on garbage."""
+    p = tmp_path / "multi.csv"
+    p.write_text("timestamp,gco2_per_kwh,price\n"
+                 + "\n".join(f"t{i},nan,{10 * i}.0" for i in range(4)) + "\n")
+    with pytest.raises(ValueError, match="column 1"):
+        from_csv(str(p), column=1)
+    # the healthy neighbouring column still ingests
+    trace = from_csv(str(p), column=2)
+    np.testing.assert_allclose(trace.intensity[::EPOCHS_PER_HOUR],
+                               [0.0, 10.0, 20.0, 30.0], rtol=1e-6)

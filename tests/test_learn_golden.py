@@ -38,11 +38,14 @@ THETA0 = 0.5
 
 
 @functools.lru_cache(maxsize=None)   # golden + sharded tests share one run
-def _tiny_run(devices=None):
+def _tiny_run(devices=None, processes=None):
     """The seed-pinned tiny training run; ``devices`` routes training and
     evaluation through repro.shard (bit-exact with the default
-    single-device path — the sharded golden test locks that).  Cached:
-    callers compare, never mutate."""
+    single-device path — the sharded golden test locks that), and
+    ``processes`` spans a ``jax.distributed`` fleet (the multi-process
+    parity payloads in ``tests/test_distributed.py`` call this exact
+    function, so the fleet reproduces the *same* golden run, not a copy
+    of it).  Cached: callers compare, never mutate."""
     import jax.numpy as jnp
 
     from repro.core import synthesize
@@ -71,14 +74,16 @@ def _tiny_run(devices=None):
     group = np.asarray(group)
     window = np.full(len(insts), WINDOW, np.int32)
 
-    if devices is None:
+    if devices is None and processes is None:
         train_fn, eval_fn = train_gate, evaluate_theta
     else:
         import functools
 
         from repro.shard import eval_theta_sharded, train_sharded
-        train_fn = functools.partial(train_sharded, devices=devices)
-        eval_fn = functools.partial(eval_theta_sharded, devices=devices)
+        train_fn = functools.partial(train_sharded, devices=devices,
+                                     processes=processes)
+        eval_fn = functools.partial(eval_theta_sharded, devices=devices,
+                                    processes=processes)
     res = train_fn(batch, intens, cums, group, window, STRETCH,
                    np.full(len(families), THETA0, np.float32),
                    LearnConfig(steps=STEPS))

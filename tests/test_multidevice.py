@@ -1,22 +1,19 @@
 """Real multi-device execution (not just compile): 8 host devices.
 
 Device count is locked at first jax init, so this test runs its payload
-in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+in a subprocess (via the shared :func:`tests.harness.run_forced_devices`
+spawn path) with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 The payload jits a reduced MoE train step over a (2, 4) ("data","model")
 mesh — exercising GSPMD sharding constraints AND the shard_map
 expert-parallel path with a real psum — and checks the loss matches the
 single-device run of the same step to bf16 tolerance.
 """
-import json
-import os
-import subprocess
-import sys
-
 import pytest
 
+from tests.harness import run_forced_devices
+
 PAYLOAD = r"""
-import os, json
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -62,12 +59,7 @@ print(json.dumps({"loss0": float(loss0), "loss1": float(loss1),
 
 @pytest.mark.slow
 def test_moe_train_step_on_8_devices():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", PAYLOAD], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    res = run_forced_devices(PAYLOAD, devices=8, timeout=900)
     assert res["devices"] == 8
     assert abs(res["loss0"] - res["loss1"]) < 0.05, res
 
@@ -84,12 +76,8 @@ print(json.dumps({"status": rec["status"],
 
 @pytest.mark.slow
 def test_dryrun_cell_compiles_on_production_mesh():
-    """One real dry-run cell (256-device mesh) end to end in a subprocess."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", DRYRUN_PAYLOAD], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    """One real dry-run cell (512-device mesh) end to end in a subprocess
+    (the dryrun import overrides the harness's forced device count)."""
+    res = run_forced_devices(DRYRUN_PAYLOAD, devices=8, timeout=900)
     assert res["status"] == "ok", res
     assert res["arg"] > 0

@@ -13,19 +13,16 @@ device multiple by inert rows.  Two layers of tests:
   single-device reference plus device-count-invariance metamorphic checks
   (1/2/4/8 all identical);
 * one subprocess test forces 8 fake host devices regardless, so multi-
-  device parity is exercised even in a plain tier-1 run (same pattern as
-  ``tests/test_multidevice.py`` — device count locks at first jax init).
+  device parity is exercised even in a plain tier-1 run (device count
+  locks at first jax init, hence the spawn) — via the shared
+  :func:`tests.harness.run_forced_devices` spawn path, the same one the
+  multi-process suite (``tests/test_distributed.py``) builds on.
 
 Property tests (hypothesis) randomize the drawn cells; parametrized
 fixed-seed tests keep every family x fleet covered when hypothesis is
 absent.  One static padded shape per module (one XLA program per entry
 point).
 """
-import json
-import os
-import subprocess
-import sys
-
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -40,6 +37,7 @@ from repro.learn import LearnConfig, evaluate_theta, train_gate
 from repro.scenarios import FAMILY_NAMES, FLEET_NAMES
 from repro.shard import (bilevel_sharded, dispatch_sharded,
                          eval_theta_sharded, train_sharded)
+from tests.harness import run_forced_devices
 from tests.strategies import scenario_case, seeds, family_names, fleet_names
 
 # One static shape for every case in this module (diamond at n_jobs=3,
@@ -203,6 +201,60 @@ def test_eval_theta_sharded_parity():
 
 
 # ---------------------------------------------------------------------------
+# The exactness lemma itself: seq_sum — the one explicitly-sequenced
+# reduction every sharded program funnels through — is invariant under any
+# device/row dealing, provided rows come back in canonical order (which is
+# exactly what the tiled all_gather by mesh position guarantees), and its
+# value is the one fixed left-to-right association.  PR 5 relied on this;
+# here it is tested directly.
+# ---------------------------------------------------------------------------
+
+def _row_values(seed, family, fleet, n=64):
+    """Realistic float32 per-row terms (carbon-intensity magnitudes with
+    full mantissas) — the population whose reassociation would actually
+    drift."""
+    _, w = scenario_case(seed, family=family, fleet=fleet, n_jobs=N_JOBS,
+                         pad_tasks=PAD_T, pad_machines=PAD_M,
+                         horizon=HORIZON)
+    return jnp.asarray(np.asarray(w.intensity, np.float32)[:n])
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(seed=seeds(), family=family_names(), fleet=fleet_names(),
+       n_dev=st.sampled_from((1, 2, 4, 8)),
+       perm_seed=st.integers(0, 2**16))
+def test_seq_sum_invariant_under_device_permutation(seed, family, fleet,
+                                                    n_dev, perm_seed):
+    from repro.learn.train import seq_sum
+    x = _row_values(seed, family, fleet)
+    ref = np.asarray(seq_sum(x))
+    shards = np.asarray(x).reshape(n_dev, -1)
+    perm = np.random.default_rng(perm_seed).permutation(n_dev)
+    # Deal row blocks onto devices in an arbitrary (permuted) order, then
+    # reassemble in canonical order — the all_gather-by-mesh-position
+    # step.  The reduction must not move by a single bit.
+    dealt = shards[perm]
+    canonical = np.concatenate(dealt[np.argsort(perm)])
+    np.testing.assert_array_equal(np.asarray(x), canonical)
+    got = np.asarray(seq_sum(jnp.asarray(canonical)))
+    np.testing.assert_array_equal(ref, got,
+                                  err_msg=f"n_dev={n_dev} perm={perm}")
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=seeds(), family=family_names(), fleet=fleet_names())
+def test_seq_sum_is_the_left_fold(seed, family, fleet):
+    """seq_sum's value is the plain left-to-right fold — the single fixed
+    association every device count reproduces."""
+    from repro.learn.train import seq_sum
+    x = _row_values(seed, family, fleet, n=32)
+    acc = jnp.zeros_like(x[0])
+    for i in range(int(x.shape[0])):
+        acc = acc + x[i]
+    np.testing.assert_array_equal(np.asarray(seq_sum(x)), np.asarray(acc))
+
+
+# ---------------------------------------------------------------------------
 # Batch-axis padding at the shard boundary.
 # ---------------------------------------------------------------------------
 
@@ -250,12 +302,12 @@ def test_sweep_sharded_bitexact_with_learn():
 
 # ---------------------------------------------------------------------------
 # Forced-8-device subprocess: multi-device parity even in a plain tier-1
-# run (device count locks at first jax init, hence the subprocess).
+# run.  Spawn mechanics (env, stdout protocol) live in tests/harness.py —
+# the payload only computes and prints its JSON result.
 # ---------------------------------------------------------------------------
 
 PAYLOAD = r"""
-import os, json
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
 import numpy as np
 import jax, jax.numpy as jnp
 from repro.core import synthesize
@@ -303,12 +355,7 @@ print(json.dumps({"devices": jax.device_count(), "dispatch": disp,
 
 @pytest.mark.slow
 def test_sharded_parity_on_8_forced_devices():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", PAYLOAD], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-2000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    res = run_forced_devices(PAYLOAD, devices=8, timeout=900)
     assert res["devices"] == 8
     assert all(res["dispatch"].values()), res
     assert all(res["train"].values()), res
